@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + host-side μs;
+TPU wall-time comes from the roofline terms, not this container)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                          # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def kernels_microbench():
+    rows = []
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(k2, (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 2, 256, 64), jnp.float32)
+    t_kern = _time(lambda a, b, c: ops.flash_attention(a, b, c,
+                                                       interpret=True),
+                   q, k, v)
+    t_ref = _time(lambda a, b, c: ref.flash_attention_ref(a, b, c), q, k, v)
+    rows.append({"bench": "kernel_flash_attn", "us_kernel_interp":
+                 round(1e6 * t_kern, 1), "us_ref": round(1e6 * t_ref, 1)})
+
+    rng = np.random.default_rng(0)
+    aff = jnp.asarray(rng.random((1024, 256)), jnp.float32)
+    sizes = jnp.asarray(rng.integers(1, 50, 1024), jnp.float32)
+    rt = jnp.asarray(np.asarray(aff).sum(1), jnp.float32)
+    cur = jnp.asarray(rng.integers(0, 256, 1024), jnp.int32)
+    loads = jnp.asarray(rng.random(256) * 100, jnp.float32)
+    t_kern = _time(lambda *a: ops.game_best_response(*a, lam=2.0,
+                                                     interpret=True),
+                   aff, sizes, rt, cur, loads)
+    t_ref = _time(lambda *a: ref.game_bestresponse_ref(*a, lam=2.0),
+                  aff, sizes, rt, cur, loads)
+    rows.append({"bench": "kernel_game_br", "us_kernel_interp":
+                 round(1e6 * t_kern, 1), "us_ref": round(1e6 * t_ref, 1)})
+
+    vals = jnp.asarray(rng.random((2048, 16)), jnp.float32)
+    cols = jnp.asarray(rng.integers(0, 4096, (2048, 16)), jnp.int32)
+    x = jnp.asarray(rng.random(4096), jnp.float32)
+    t_kern = _time(lambda *a: ops.ell_spmv(*a, interpret=True),
+                   vals, cols, x)
+    t_ref = _time(lambda *a: ref.ell_spmv_ref(*a), vals, cols, x)
+    rows.append({"bench": "kernel_ell_spmv", "us_kernel_interp":
+                 round(1e6 * t_kern, 1), "us_ref": round(1e6 * t_ref, 1)})
+    return rows

@@ -1,0 +1,144 @@
+"""Paper figures 3–7 and 9–11 as benchmark functions over synthetic web
+graphs (see DESIGN.md §3 — offline substitutes in the same degree-law
+regime).  Each ``fig*`` function returns CSV-ready rows."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (CLUGPConfig, clugp_partition,
+                        clugp_partition_parallel, metrics, web_graph)
+from repro.core.graphgen import social_graph
+from .common import quality_row
+
+ALGOS = ["clugp", "clugp-opt", "hashing", "dbh", "greedy", "hdrf", "mint"]
+
+
+def fig3_rf_vs_partitions(scale=12, ks=(4, 16, 64, 256), seed=0):
+    """Fig. 3: replication factor vs #partitions, web graph."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    rows = []
+    for k in ks:
+        for algo in ALGOS:
+            r = quality_row(algo, g, k, seed)
+            r["bench"] = "fig3_rf_web"
+            rows.append(r)
+    return rows
+
+
+def fig4_social(scale=12, ks=(16, 64), seed=1):
+    """Fig. 4: social graph (Twitter analogue) — RF + total runtime."""
+    g = social_graph(n=1 << scale, m=8, seed=seed)
+    rows = []
+    for k in ks:
+        for algo in ALGOS:
+            r = quality_row(algo, g, k, seed)
+            r["bench"] = "fig4_rf_social"
+            rows.append(r)
+    return rows
+
+
+def fig5_graph_size(scales=(10, 11, 12, 13), k=16, seed=0):
+    """Fig. 5: RF vs graph size (sampled)."""
+    rows = []
+    for s in scales:
+        g = web_graph(scale=s, edge_factor=8, seed=seed)
+        for algo in ("clugp-opt", "hdrf", "hashing"):
+            r = quality_row(algo, g, k, seed)
+            r["bench"] = "fig5_size"
+            r["edges"] = g.num_edges
+            rows.append(r)
+    return rows
+
+
+def fig6_space(scale=12, ks=(16, 64, 256), seed=0):
+    """Fig. 6: resident partitioner state (bytes).  Analytic per §III-V:
+    CLUGP O(2|V|) + O(m); HDRF/Greedy O(|V|·k/8) bitsets + loads;
+    DBH O(|V|); Hashing O(1); Mint O(window)."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    V, E = g.num_vertices, g.num_edges
+    rows = []
+    for k in ks:
+        m_est = clugp_partition(g.src, g.dst, g.num_vertices,
+                                CLUGPConfig(k=k)).stats["num_clusters"]
+        space = {
+            "clugp": 8 * V + 8 * V + 8 * m_est,     # clu[] + deg[] + game
+            "hashing": 0,
+            "dbh": 8 * V,
+            "greedy": V * ((k + 63) // 64) * 8 + 8 * V,
+            "hdrf": V * ((k + 63) // 64) * 8 + 8 * V + 8 * k,
+            "mint": 8 * 4096 * 4,
+        }
+        for algo, b in space.items():
+            rows.append({"bench": "fig6_space", "algo": algo, "k": k,
+                         "bytes": int(b)})
+    return rows
+
+
+def fig7_runtime_vs_k(scale=12, ks=(4, 16, 64, 256), seed=0):
+    """Fig. 7: partitioning runtime scaling in k (µs/edge)."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    rows = []
+    for k in ks:
+        for algo in ("clugp", "hashing", "dbh", "hdrf", "greedy"):
+            r = quality_row(algo, g, k, seed)
+            r["bench"] = "fig7_runtime"
+            rows.append(r)
+    return rows
+
+
+def fig9_ablation(scale=12, ks=(4, 16, 64, 256), seed=0):
+    """Fig. 9: splitting (CLUGP-S) and game (CLUGP-G) ablations."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    rows = []
+    for k in ks:
+        for algo in ("clugp", "clugp-nosplit", "clugp-nogame"):
+            r = quality_row(algo, g, k, seed)
+            r["bench"] = "fig9_ablation"
+            rows.append(r)
+    return rows
+
+
+def fig10_parallelization(scale=12, k=16, seed=0):
+    """Fig. 10: (a) distributed nodes (thread analogue) sweep;
+    (b) game batch-size sweep."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    rows = []
+    for nodes in (1, 2, 4, 8):
+        t0 = time.time()
+        res = clugp_partition_parallel(g.src, g.dst, g.num_vertices,
+                                       CLUGPConfig(k=k), n_nodes=nodes)
+        rows.append({"bench": "fig10_nodes", "nodes": nodes, "k": k,
+                     "rf": round(res.stats["rf"], 4),
+                     "seconds": round(time.time() - t0, 4)})
+    for bs in (64, 400, 1600, 6400):
+        t0 = time.time()
+        res = clugp_partition(g.src, g.dst, g.num_vertices,
+                              CLUGPConfig(k=k, batch_size=bs))
+        rows.append({"bench": "fig10_batch", "batch": bs, "k": k,
+                     "rf": round(res.stats["rf"], 4),
+                     "rounds": res.game_rounds,
+                     "seconds": round(time.time() - t0, 4)})
+    return rows
+
+
+def fig11_weight_and_balance(scale=12, k=16, seed=0):
+    """Fig. 11: (a) RF vs relative load balance τ; (b) RF vs relative
+    weight of the two game objectives."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    rows = []
+    for tau in (1.0, 1.2, 1.5, 2.0, 3.0):
+        res = clugp_partition(g.src, g.dst, g.num_vertices,
+                              CLUGPConfig(k=k, tau=tau))
+        rows.append({"bench": "fig11a_tau", "tau": tau, "k": k,
+                     "rf": round(res.stats["rf"], 4),
+                     "balance": round(res.stats["balance"], 4)})
+    for w in (0.1, 0.3, 0.5, 0.7, 0.9):
+        res = clugp_partition(g.src, g.dst, g.num_vertices,
+                              CLUGPConfig(k=k, relative_weight=w))
+        rows.append({"bench": "fig11b_weight", "weight": w, "k": k,
+                     "rf": round(res.stats["rf"], 4),
+                     "balance": round(res.stats["balance"], 4)})
+    return rows

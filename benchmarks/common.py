@@ -1,0 +1,45 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (CLUGPConfig, baselines, clugp_partition, metrics,
+                        random_stream)
+
+
+def run_partitioner(name: str, g, k: int, seed: int = 0,
+                    profile: str = "paper"):
+    """Returns (assign, seconds).  CLUGP streams in crawl order; baselines
+    get their best order (random — paper §VI-A)."""
+    t0 = time.time()
+    if name.startswith("clugp"):
+        cfg = (CLUGPConfig.optimized(k) if name == "clugp-opt"
+               else CLUGPConfig.paper(k))
+        if name == "clugp-nosplit":
+            cfg = CLUGPConfig(k=k, split=False)
+        if name == "clugp-nogame":
+            cfg = CLUGPConfig(k=k, game=False)
+        res = clugp_partition(g.src, g.dst, g.num_vertices, cfg)
+        return res.assign, time.time() - t0, res
+    gr = random_stream(g, seed=seed)
+    t0 = time.time()
+    a = baselines.ALL_BASELINES[name](gr.src, gr.dst, g.num_vertices, k,
+                                      seed=seed)
+    dt = time.time() - t0
+    return a, dt, (gr.src, gr.dst)
+
+
+def quality_row(name, g, k, seed=0):
+    out = run_partitioner(name, g, k, seed)
+    assign, dt = out[0], out[1]
+    if name.startswith("clugp"):
+        src, dst = g.src, g.dst
+    else:
+        src, dst = out[2]
+    rf = metrics.replication_factor(src, dst, assign, g.num_vertices, k)
+    bal = metrics.load_balance(assign, k)
+    return {"algo": name, "k": k, "rf": round(rf, 4),
+            "balance": round(bal, 4), "seconds": round(dt, 4),
+            "us_per_edge": round(1e6 * dt / g.num_edges, 3)}

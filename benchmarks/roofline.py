@@ -1,0 +1,195 @@
+"""§Roofline report: combine full-cell dry-run records (memory, sharding
+proof) with probe records (trip-count-exact flops/bytes/collectives) into
+the three-term roofline table.
+
+Terms per (arch × shape), single-pod (16,16) mesh, v5e constants:
+    compute    = flops_dev / 197e12            [s]
+    memory     = bytes_dev / 819e9             [s]
+    collective = coll_bytes_dev / (3 · 50e9)   [s]   (v5e: 3 usable ICI
+                                                      links per direction
+                                                      on a 2D torus slice)
+MODEL_FLOPS = 6·N_active·D_tokens (per device: /256); ratio vs HLO flops
+shows padded-head/remat/capacity waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, get_config
+from repro.launch.specs import SHAPES, cell_is_skipped
+from repro.models import param_count
+from repro.models.lm import abstract_params, np_prod
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 3
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def active_params(arch: str) -> float:
+    """N_active (MoE: shared + top-k experts + attention/embed only)."""
+    cfg = get_config(arch)
+    n_total = param_count(cfg, mp=1)
+    if cfg.moe is None:
+        return float(n_total)
+    # expert bank contribution scaled by top_k/E
+    tree = abstract_params(cfg, 1)
+    expert_bytes = 0
+    for path, leaf in _walk(tree):
+        if "experts" in path:
+            expert_bytes += np_prod(leaf.shape)
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    return float(n_total - expert_bytes * (1.0 - frac))
+
+
+def _walk(tree):
+    import jax
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        yield jax.tree_util.keystr(path), leaf
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N_active·tokens for train; 2·N_active·tokens for prefill/decode,
+    GLOBAL (divide by chips for per-device).  Enc-dec: each token passes
+    one of the two stacks (×0.5)."""
+    sh = SHAPES[shape_name]
+    cfg = get_config(arch)
+    n = active_params(arch)
+    half = 0.5 if cfg.family == "encdec" else 1.0
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * n * tokens * half
+    if sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * n * tokens * half
+    return 2.0 * n * sh["global_batch"] * half   # decode: 1 token each
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, n_dev: int = 256) -> float:
+    """Napkin lower bound on per-device HBM traffic (perfect fusion:
+    intermediates stay in VMEM).  The true value lies between this and the
+    HLO bytes-accessed upper bound; see EXPERIMENTS.md §Method.
+
+    train:  weights fwd+bwd reads (bf16) + grad/master/moment RW (fp32,
+            ZeRO-sharded) + layer-boundary activations ×(fwd write, bwd
+            read, remat re-write) + chunked logits.
+    prefill: weight reads + activations + KV cache writes.
+    decode:  weight reads + full KV cache read + one row write.
+    """
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    N = param_count(cfg, mp=16)
+    n_loc = N / n_dev
+    D = cfg.d_model
+    L = cfg.n_layers + cfg.n_encoder_layers
+    act_tokens = B * S / 16          # per-device tokens (dp=16)
+    if sh["kind"] == "train":
+        w = 4 * n_loc * 2            # bf16 gathered reads, fwd+bwd (ZeRO)
+        opt = 20 * n_loc             # grads + master + moments fp32 RW
+        acts = 6 * L * act_tokens * D * 2
+        logits = 2 * act_tokens * cfg.padded_vocab * 2 / 16  # vocab-sharded
+        return w + opt + acts + logits
+    if sh["kind"] == "prefill":
+        w = 2 * n_loc
+        acts = 2 * L * act_tokens * D * 2
+        kv = L * act_tokens * cfg.n_kv_heads * cfg.hd * 2 * 2
+        return w + acts + kv
+    # decode: B tokens, KV cache length S sequence-sharded over 16
+    w = 2 * n_loc
+    kv_read = (L * (B / 16) * (S / 16) * cfg.n_kv_heads * cfg.hd * 2 * 2
+               if cfg.family != "ssm" else 0)
+    if cfg.mla is not None:
+        m = cfg.mla
+        kv_read = L * (B / 16) * (S / 16) * (m.kv_lora + m.rope_dim) * 2
+    ssm = 0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        h = s.expand * D // s.head_dim
+        ssm = L * (B / 16) * h * s.d_state * s.head_dim * 4 * 2
+    return w + kv_read + ssm
+
+
+def load(tag: str = "baseline", subdir: str = "dryrun"):
+    """Returns {(arch, shape): row} merged from full + probe records."""
+    out = {}
+    for arch in ARCHS:
+        for shape in SHAPES:
+            cfg = get_config(arch)
+            skip = cell_is_skipped(cfg, shape)
+            key = (arch, shape)
+            if skip:
+                out[key] = {"arch": arch, "shape": shape, "status": skip}
+                continue
+            suffix = "" if tag == "baseline" else f"__{tag}"
+            full_p = RESULTS / subdir / f"{arch}__{shape}__single{suffix}.json"
+            probe_p = RESULTS / subdir / f"{arch}__{shape}__probe{suffix}.json"
+            if not (full_p.exists() and probe_p.exists()):
+                out[key] = {"arch": arch, "shape": shape,
+                            "status": "missing records"}
+                continue
+            full = json.loads(full_p.read_text())
+            probe = json.loads(probe_p.read_text())
+            if probe.get("status") != "ok" or full.get("status") != "ok":
+                out[key] = {"arch": arch, "shape": shape,
+                            "status": f"probe={probe.get('status')} "
+                                      f"full={full.get('status')}"}
+                continue
+            t = probe["totals"]
+            n_dev = full["n_devices"]
+            # probe extrapolation can go slightly negative when XLA CSEs
+            # collectives across unrolled layers — clamp (noted in §Method)
+            t = {k: max(v, 0.0) for k, v in t.items()}
+            compute = t["flops"] / PEAK_FLOPS
+            mem_hi = t["bytes"] / HBM_BW               # HLO upper bound
+            mem_lo = analytic_hbm_bytes(arch, shape, n_dev) / HBM_BW
+            memory = mem_lo                            # dominant-term basis
+            coll = t["coll"] / (ICI_BW * ICI_LINKS)
+            dom = max((compute, "compute"), (memory, "memory"),
+                      (coll, "collective"))
+            mf = model_flops(arch, shape) / n_dev
+            out[key] = {
+                "arch": arch, "shape": shape, "status": "ok",
+                "flops_dev": t["flops"], "bytes_dev": t["bytes"],
+                "coll_dev": t["coll"],
+                "t_compute_s": compute,
+                "t_memory_lo_s": mem_lo, "t_memory_hi_s": mem_hi,
+                "t_collective_s": coll,
+                "dominant": dom[1],
+                "bound_s": dom[0],
+                "model_flops_dev": mf,
+                "useful_ratio": mf / max(t["flops"], 1.0),
+                "roofline_frac": compute / max(dom[0], 1e-30),
+                "peak_mem_gb": full["memory"]["peak_bytes"] / 2**30,
+                "fits_16g": full["memory"]["peak_bytes"] < 16 * 2**30,
+            }
+    return out
+
+
+def report(tag: str = "baseline", subdir: str = "dryrun"):
+    rows = load(tag, subdir)
+    out = []
+    for (arch, shape), r in sorted(rows.items()):
+        if r.get("status") != "ok":
+            out.append(f"{arch:26s} {shape:12s} {r.get('status')}")
+            continue
+        out.append(
+            f"{arch:26s} {shape:12s} comp={r['t_compute_s']:.3e}s "
+            f"mem={r['t_memory_lo_s']:.2e}..{r['t_memory_hi_s']:.2e}s "
+            f"coll={r['t_collective_s']:.3e}s "
+            f"dom={r['dominant']:10s} roofline={r['roofline_frac']:.2f} "
+            f"useful={r['useful_ratio']:.2f} "
+            f"peak={r['peak_mem_gb']:.1f}GB")
+    return "\n".join(out)
+
+
+def roofline_rows(tag: str = "baseline", subdir: str = "dryrun"):
+    return [r for r in load(tag, subdir).values()]
+
+
+if __name__ == "__main__":
+    import sys
+    sub = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
+    print(report(subdir=sub))

@@ -1,0 +1,80 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows + writes results/bench.json.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # smaller graphs
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    scale = 11 if args.quick else 12
+
+    from . import bench_partitioning as bp
+    from .bench_pagerank import fig8_pagerank
+    from .bench_kernels import kernels_microbench
+    from .bench_expert_placement import expert_placement_bench
+
+    suites = {
+        "fig3_rf_web": lambda: bp.fig3_rf_vs_partitions(scale=scale),
+        "fig4_social": lambda: bp.fig4_social(scale=scale),
+        "fig5_size": lambda: bp.fig5_graph_size(
+            scales=tuple(range(scale - 2, scale + 1))),
+        "fig6_space": lambda: bp.fig6_space(scale=scale),
+        "fig7_runtime": lambda: bp.fig7_runtime_vs_k(scale=scale),
+        "fig8_pagerank": lambda: fig8_pagerank(scale=scale - 1),
+        "fig9_ablation": lambda: bp.fig9_ablation(scale=scale),
+        "fig10_parallel": lambda: bp.fig10_parallelization(scale=scale),
+        "fig11_weight": lambda: bp.fig11_weight_and_balance(scale=scale),
+        "kernels": kernels_microbench,
+        "expert_placement": expert_placement_bench,
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if args.only in k}
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+        dt = time.time() - t0
+        all_rows.extend(rows)
+        for r in rows:
+            derived = ";".join(f"{k}={v}" for k, v in r.items()
+                               if k != "bench")
+            print(f"{r.get('bench', name)},"
+                  f"{r.get('us_per_edge', round(1e6 * dt / max(len(rows), 1), 1))},"
+                  f"{derived}")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "bench.json").write_text(json.dumps(all_rows, indent=1))
+
+    # roofline summary appended if dry-run records exist
+    try:
+        from .roofline import report
+        for sub, label in (("dryrun", "baseline"),
+                           ("dryrun_opt", "optimized")):
+            txt = report(subdir=sub)
+            print(f"\n# ---- roofline {label} (single-pod, per-device) ----")
+            print(txt)
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

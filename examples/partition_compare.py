@@ -1,0 +1,16 @@
+"""Compare all partitioners across k — a minified Fig. 3/7.
+
+    PYTHONPATH=src python examples/partition_compare.py
+"""
+from benchmarks.common import quality_row
+from repro.core import web_graph
+
+g = web_graph(scale=12, edge_factor=8, seed=0)
+print(f"web graph: |V|={g.num_vertices} |E|={g.num_edges}")
+print(f"{'algo':12s} {'k':>4s} {'RF':>8s} {'balance':>8s} {'µs/edge':>9s}")
+for k in (4, 16, 64):
+    for algo in ("clugp", "clugp-opt", "hashing", "dbh", "greedy", "hdrf",
+                 "mint"):
+        r = quality_row(algo, g, k)
+        print(f"{r['algo']:12s} {r['k']:>4d} {r['rf']:>8.3f} "
+              f"{r['balance']:>8.3f} {r['us_per_edge']:>9.2f}")

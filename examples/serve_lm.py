@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + decode with a KV cache on a reduced
+qwen2-family model (the decode path is the one the dry-run lowers with a
+sequence-sharded cache at (16,16)/(2,16,16)).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.argv = ["serve", "--arch", "qwen2-7b", "--batch", "4",
+            "--prompt-len", "16", "--tokens", "24"]
+
+from repro.launch import serve  # noqa: E402
+
+serve.main()

@@ -1,0 +1,1 @@
+from .checkpoint import save, restore, restore_latest, list_steps  # noqa: F401

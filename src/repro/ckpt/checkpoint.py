@@ -1,0 +1,104 @@
+"""Sharded checkpointing with atomic writes + elastic restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json   — step, tree structure, shapes/dtypes, mesh,
+                              arch fingerprint, rng state
+            arrays.npz      — flattened leaves keyed by tree path
+
+Fault-tolerance contract:
+- writes go to ``step_<N>.tmp`` then os.replace → a reader never sees a
+  torn checkpoint; ``restore_latest`` skips trailing garbage.
+- restore re-shards onto the *current* mesh/device count (elastic): arrays
+  are stored unsharded (gathered) and device_put with the target sharding.
+  At smoke scale gathering is free; at production scale this becomes a
+  per-shard file layout — same manifest contract (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out, dtypes = {}, {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+            arr = arr.astype(np.float32)      # lossless bf16 → f32
+        out[key] = arr
+    return out, dtypes
+
+
+def save(path: str | Path, step: int, tree, extra: dict | None = None):
+    path = Path(path)
+    final = path / f"step_{step:08d}"
+    tmp = Path(str(final) + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat, dtypes = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes,
+                "extra": extra or {}}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def list_steps(path: str | Path) -> list[int]:
+    path = Path(path)
+    if not path.exists():
+        return []
+    out = []
+    for d in path.iterdir():
+        if d.is_dir() and d.name.startswith("step_") \
+                and not d.name.endswith(".tmp") \
+                and (d / "manifest.json").exists():
+            try:
+                json.loads((d / "manifest.json").read_text())
+                out.append(int(d.name[5:]))
+            except (ValueError, json.JSONDecodeError):
+                continue   # torn write — skip
+    return sorted(out)
+
+
+def restore(path: str | Path, step: int, target_tree, shardings=None):
+    """target_tree provides structure; shardings (optional pytree of
+    NamedSharding) re-shards elastically onto the current mesh."""
+    path = Path(path) / f"step_{step:08d}"
+    data = np.load(path / "arrays.npz")
+    manifest = json.loads((path / "manifest.json").read_text())
+    dtypes = manifest.get("dtypes", {})
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    out = []
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    for (kpath, leaf), sh in zip(leaves, shard_leaves):
+        key = jax.tree_util.keystr(kpath)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        want = dtypes.get(key, str(arr.dtype))
+        if "bfloat16" in want:
+            arr = jax.numpy.asarray(arr).astype(jax.numpy.bfloat16)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(path: str | Path, target_tree, shardings=None):
+    steps = list_steps(path)
+    if not steps:
+        return None, -1
+    step = steps[-1]
+    return restore(path, step, target_tree, shardings), step

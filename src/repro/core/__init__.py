@@ -1,0 +1,11 @@
+"""CLUGP core: the paper's three-pass restreaming vertex-cut partitioner."""
+from .graphgen import Graph, web_graph, social_graph, rmat, barabasi, bfs_order, random_stream  # noqa: F401
+from .clustering import (streaming_clustering_np, streaming_clustering_jax,  # noqa: F401
+                         clustering_result_from_jax, default_vmax,
+                         ClusteringResult)
+from .game import (contract, best_response_rounds, greedy_assign,  # noqa: F401
+                   lambda_max, lambda_from_weight, potential, global_cost,
+                   ClusterGraph, GameResult)
+from .transform import transform_np, transform_jax  # noqa: F401
+from .pipeline import CLUGPConfig, CLUGPResult, clugp_partition, clugp_partition_parallel  # noqa: F401
+from . import baselines, metrics, theory  # noqa: F401

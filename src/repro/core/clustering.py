@@ -1,0 +1,255 @@
+"""Pass 1 — streaming clustering (paper Alg. 2).
+
+The *allocation–splitting–migration* framework.  Two interchangeable
+implementations with identical semantics (tested against each other):
+
+- ``streaming_clustering_np``  : host fast path (the partitioner runs on the
+  host, like the paper's Java pipeline; the stream is inherently sequential).
+- ``streaming_clustering_jax`` : ``jax.lax.scan`` over the edge stream with a
+  dense carried state — the JAX-native form used under jit and in the
+  multi-device pipeline (each distributed node clusters its local stream,
+  paper §III-C last paragraph).
+
+State per paper: ``clu[v]`` vertex→cluster, ``deg[v]`` streamed degree,
+``vol[c]`` cluster volume (sum of member degrees), ``divided[v]`` mark.
+Splitting (lines 9–18) fires when a cluster overflows ``V_max``: the
+triggering vertex moves to a fresh cluster, leaving a mirror behind.
+Migration (lines 20–26) pulls one endpoint into the larger cluster.
+
+``allow_split=False`` degrades CLUGP to Hollocou et al.'s allocation–
+migration (the paper's Holl baseline and the CLUGP-S ablation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class ClusteringResult:
+    clu: np.ndarray            # vertex -> compact cluster id, int32[V]
+    deg: np.ndarray            # streamed degree, int32[V]
+    divided: np.ndarray        # bool[V], vertex was split at least once
+    replicas: np.ndarray       # int32[V], #mirrors created during clustering
+    num_clusters: int
+
+    def cluster_rf(self, num_vertices: int) -> float:
+        """Replication factor at cluster granularity (Fig. 2 accounting)."""
+        active = self.deg > 0
+        return float((active.sum() + self.replicas[active].sum())
+                     / max(1, active.sum()))
+
+
+def _compact_labels(raw: np.ndarray) -> tuple[np.ndarray, int]:
+    used, inv = np.unique(raw[raw >= 0], return_inverse=True)
+    out = np.full(raw.shape[0], -1, dtype=np.int32)
+    out[raw >= 0] = inv.astype(np.int32)
+    return out, int(used.shape[0])
+
+
+def streaming_clustering_np(src: np.ndarray, dst: np.ndarray,
+                            num_vertices: int, vmax: float,
+                            allow_split: bool = True,
+                            split_degree_factor: float = 0.0) -> ClusteringResult:
+    """``split_degree_factor`` is a beyond-paper damping knob: a split of
+    vertex x only fires if ``deg(x) ≥ factor × mean_streamed_degree`` — the
+    replica is only paid when the volume drained (deg x) is worth it.  The
+    paper-faithful setting is 0 (always split on overflow, Alg. 2 verbatim);
+    the optimized profile uses 4 (see EXPERIMENTS.md §Perf-partitioner)."""
+    V = num_vertices
+    clu = np.full(V, -1, dtype=np.int64)
+    deg = np.zeros(V, dtype=np.int64)
+    divided = np.zeros(V, dtype=bool)
+    replicas = np.zeros(V, dtype=np.int64)
+    # worst case ids: one per vertex + one per split (≤ 2 per edge)
+    vol = np.zeros(V + 2 * src.shape[0] + 2, dtype=np.int64)
+    next_id = 0
+    seen_deg = 0
+    seen_v = 0
+
+    cl = clu  # local aliases (python-loop hot path)
+    dg = deg
+    vl = vol
+    for i in range(src.shape[0]):
+        u = int(src[i]); v = int(dst[i])
+        if u == v:
+            continue
+        cu = cl[u]
+        if cu < 0:                       # allocation (lines 3-5)
+            cu = next_id; next_id += 1
+            cl[u] = cu
+            seen_v += 1
+        cv = cl[v]
+        if cv < 0:
+            cv = next_id; next_id += 1
+            cl[v] = cv
+            seen_v += 1
+        dg[u] += 1; dg[v] += 1           # line 6
+        vl[cu] += 1; vl[cv] += 1         # line 7
+        seen_deg += 2
+        if allow_split:
+            dthresh = split_degree_factor * seen_deg / seen_v
+            if cu == cv:
+                # same-cluster overflow: split only the higher-degree
+                # endpoint and keep the edge with the lower-degree one
+                # (paper §IV-A divided-vertex tie rule) — splitting both
+                # would add a replica for nothing.
+                if vl[cu] >= vmax:
+                    x = u if dg[u] >= dg[v] else v
+                    if dg[x] >= dthresh:
+                        nc = next_id; next_id += 1
+                        cl[x] = nc
+                        divided[x] = True
+                        replicas[x] += 1
+                        vl[cu] -= dg[x]
+                        vl[nc] += dg[x]
+            else:
+                if vl[cu] >= vmax and dg[u] >= dthresh:   # split u (8-13)
+                    nc = next_id; next_id += 1
+                    cl[u] = nc
+                    divided[u] = True
+                    replicas[u] += 1
+                    vl[cu] -= dg[u]
+                    vl[nc] += dg[u]
+                cv = cl[v]
+                if vl[cv] >= vmax and dg[v] >= dthresh:   # split v (14-18)
+                    nc = next_id; next_id += 1
+                    cl[v] = nc
+                    divided[v] = True
+                    replicas[v] += 1
+                    vl[cv] -= dg[v]
+                    vl[nc] += dg[v]
+        cu = cl[u]; cv = cl[v]           # line 19
+        if cu != cv and vl[cu] < vmax and vl[cv] < vmax:   # migration 20-26
+            # post-guard: a migration must not overflow the target — an
+            # over-full cluster would shred its members via later splits.
+            if vl[cu] <= vl[cv]:
+                if vl[cv] + dg[u] < vmax:
+                    cl[u] = cv
+                    vl[cu] -= dg[u]; vl[cv] += dg[u]
+            else:
+                if vl[cu] + dg[v] < vmax:
+                    cl[v] = cu
+                    vl[cv] -= dg[v]; vl[cu] += dg[v]
+
+    compact, m = _compact_labels(clu)
+    return ClusteringResult(compact, deg.astype(np.int32), divided,
+                            replicas.astype(np.int32), m)
+
+
+# ---------------------------------------------------------------------------
+# JAX scan version — identical transition function, dense carried state.
+# ---------------------------------------------------------------------------
+
+def _cluster_step(state, edge, *, vmax: float, allow_split: bool,
+                  split_degree_factor: float):
+    clu, deg, vol, divided, replicas, next_id, seen_deg, seen_v = state
+    u, v = edge[0], edge[1]
+    self_loop = u == v
+
+    def alloc(clu, next_id, seen_v, x):
+        has = clu[x] >= 0
+        cid = jnp.where(has, clu[x], next_id)
+        clu = clu.at[x].set(cid)
+        next_id = jnp.where(has, next_id, next_id + 1)
+        seen_v = jnp.where(has, seen_v, seen_v + 1)
+        return clu, next_id, seen_v, cid
+
+    clu, next_id, seen_v, cu = alloc(clu, next_id, seen_v, u)
+    clu, next_id, seen_v, cv = alloc(clu, next_id, seen_v, v)
+    deg = deg.at[u].add(1).at[v].add(1)
+    vol = vol.at[cu].add(1).at[cv].add(1)
+    seen_deg = seen_deg + 2
+
+    if allow_split:
+        dthresh = split_degree_factor * seen_deg.astype(jnp.float32) \
+            / jnp.maximum(seen_v, 1).astype(jnp.float32)
+        same = cu == cv
+
+        def split_one(carry, target, fire):
+            clu, vol, divided, replicas, next_id = carry
+            cx = clu[target]
+            dx = deg[target]
+            nc = next_id
+            clu = clu.at[target].set(jnp.where(fire, nc, cx))
+            vol = vol.at[cx].add(jnp.where(fire, -dx, 0))
+            vol = vol.at[nc].add(jnp.where(fire, dx, 0))
+            divided = divided.at[target].set(divided[target] | fire)
+            replicas = replicas.at[target].add(fire.astype(jnp.int32))
+            next_id = next_id + fire.astype(jnp.int32)
+            return (clu, vol, divided, replicas, next_id)
+
+        carry = (clu, vol, divided, replicas, next_id)
+        # same-cluster overflow → split only the higher-degree endpoint;
+        # different clusters → split u first (Alg. 2 lines 8-13)
+        x = jnp.where(deg[u] >= deg[v], u, v)
+        target1 = jnp.where(same, x, u)
+        d1ok = deg[target1].astype(jnp.float32) >= dthresh
+        fire1 = (vol[clu[target1]] >= vmax) & d1ok
+        carry = split_one(carry, target1, fire1)
+        clu, vol, divided, replicas, next_id = carry
+        # v-split only applies in the different-cluster branch (14-18)
+        d2ok = deg[v].astype(jnp.float32) >= dthresh
+        fire2 = (~same) & (vol[clu[v]] >= vmax) & d2ok
+        carry = split_one(carry, v, fire2)
+        clu, vol, divided, replicas, next_id = carry
+
+    cu, cv = clu[u], clu[v]
+    both_room = (vol[cu] < vmax) & (vol[cv] < vmax) & (cu != cv)
+    du, dv = deg[u], deg[v]
+    # migration post-guard: must not overflow the target
+    u_moves = both_room & (vol[cu] <= vol[cv]) & (vol[cv] + du < vmax)
+    v_moves = both_room & (vol[cu] > vol[cv]) & (vol[cu] + dv < vmax)
+    clu = clu.at[u].set(jnp.where(u_moves, cv, clu[u]))
+    clu = clu.at[v].set(jnp.where(v_moves, cu, clu[v]))
+    vol = vol.at[cu].add(jnp.where(u_moves, -du, 0) + jnp.where(v_moves, dv, 0))
+    vol = vol.at[cv].add(jnp.where(u_moves, du, 0) + jnp.where(v_moves, -dv, 0))
+
+    # a self loop must leave the state untouched
+    def freeze(new, old):
+        return jax.tree_util.tree_map(
+            lambda n, o: jnp.where(self_loop, o, n), new, old)
+
+    new_state = (clu, deg, vol, divided, replicas, next_id, seen_deg, seen_v)
+    return freeze(new_state, state), None
+
+
+def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
+                             allow_split: bool = True,
+                             split_degree_factor: float = 0.0):
+    """lax.scan form; returns raw (non-compacted) labels + state arrays."""
+    E = src.shape[0]
+    cap = num_vertices + 2 * E + 2
+    state = (
+        jnp.full((num_vertices,), -1, dtype=jnp.int32),
+        jnp.zeros((num_vertices,), dtype=jnp.int32),
+        jnp.zeros((cap,), dtype=jnp.int32),
+        jnp.zeros((num_vertices,), dtype=bool),
+        jnp.zeros((num_vertices,), dtype=jnp.int32),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    edges = jnp.stack([jnp.asarray(src, jnp.int32),
+                       jnp.asarray(dst, jnp.int32)], axis=1)
+    step = lambda s, e: _cluster_step(
+        s, e, vmax=float(vmax), allow_split=allow_split,
+        split_degree_factor=float(split_degree_factor))
+    (clu, deg, vol, divided, replicas, next_id, _, _), _ = jax.lax.scan(
+        step, state, edges)
+    return clu, deg, divided, replicas, next_id
+
+
+def clustering_result_from_jax(clu, deg, divided, replicas) -> ClusteringResult:
+    compact, m = _compact_labels(np.asarray(clu))
+    return ClusteringResult(compact, np.asarray(deg), np.asarray(divided),
+                            np.asarray(replicas), m)
+
+
+def default_vmax(num_edges: int, k: int) -> float:
+    """Paper §VI-A: V_max = |E| / k."""
+    return max(2.0, num_edges / float(k))

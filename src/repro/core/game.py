@@ -1,0 +1,217 @@
+"""Pass 2 — game-theoretic cluster partitioning (paper §V, Alg. 3).
+
+Each cluster is a selfish player choosing one of k partitions to minimize
+
+    φ(a_i) = (λ/k)·|c_i|·|a_i|  +  ½·(|e(c_i, V\\a_i)| + |e(V\\a_i, c_i)|)
+
+This is an exact potential game (Thm 4) with potential
+
+    Φ(Λ)  = (λ/2k)·Σ|p_i|²  +  ½·Σ|e(p_i, V\\p_i)|
+
+so sequential best response converges to a Nash equilibrium; the paper
+parallelizes by batching clusters (contiguous IDs — BFS locality, §V-D) and
+running batches concurrently against a shared snapshot.  We reproduce both:
+``best_response_rounds`` (host, vectorized-Jacobi-within-batch /
+Gauss–Seidel-across-batches) and a jitted JAX variant used by shard_map
+(one batch per device) and by the Pallas ``game_bestresponse`` kernel.
+
+λ defaults to its maximum feasible value (Thm 5), the paper's §VI setting:
+    λ_max = k²·Σ|e(c_i, V\\c_i)|  /  (Σ|c_i|)²
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import scipy.sparse as sp
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class ClusterGraph:
+    """Contracted graph: vertices = clusters."""
+    sizes: np.ndarray          # |c_i| = intra-cluster edge counts, int64[m]
+    adj: sp.csr_matrix         # symmetrized inter-cluster edge counts, m×m
+    vertex_cluster: np.ndarray  # original vertex -> cluster id
+    m: int
+
+    @property
+    def total_cut_capacity(self) -> int:
+        """Σ_i |e(c_i, V\\c_i)| — Thm 5/6 constant (each directed cross edge
+        counted once per incident cluster, i.e. adj.sum() counts it twice
+        after symmetrization... adj already = W + Wᵀ so row sums are it)."""
+        return int(self.adj.sum()) // 1  # Σ_i row_sum = Σ_i |e(c_i,·)|+|e(·,c_i)|
+
+
+def contract(src: np.ndarray, dst: np.ndarray, clu: np.ndarray) -> ClusterGraph:
+    """Build the cluster multigraph from the vertex→cluster table."""
+    cs, cd = clu[src], clu[dst]
+    m = int(clu.max()) + 1 if clu.size else 0
+    intra = cs == cd
+    sizes = np.bincount(cs[intra], minlength=m).astype(np.int64)
+    xs, xd = cs[~intra], cd[~intra]
+    w = np.ones(xs.shape[0], dtype=np.int64)
+    W = sp.coo_matrix((w, (xs, xd)), shape=(m, m)).tocsr()
+    S = (W + W.T).tocsr()
+    S.sum_duplicates()
+    return ClusterGraph(sizes, S, clu, m)
+
+
+def lambda_max(cg: ClusterGraph, k: int) -> float:
+    """Thm 5 upper end of the feasible λ range (paper's default)."""
+    total_sizes = float(cg.sizes.sum())
+    if total_sizes <= 0:
+        return 1.0
+    # Σ_i |e(c_i,V\c_i)| with both directions = adj row sums / but each
+    # directed edge contributes to exactly two clusters' boundaries; the
+    # paper's Σ counts per-cluster boundary edges, i.e. adj.sum()/2 per
+    # direction pair — use the symmetric total/2 (per-cluster out+in)/2.
+    total_cut = float(cg.adj.sum()) / 2.0
+    return (k * k) * total_cut / (total_sizes * total_sizes)
+
+
+def lambda_from_weight(cg: ClusterGraph, k: int, weight: float) -> float:
+    """Relative-weight parameterization (paper Fig. 11b): weight∈(0,1) is
+    the share of the load-balance term; 0.5 ⇒ the Eq. 15 equal-importance
+    setting scaled so both terms match at a uniform random assignment."""
+    total_sizes = float(cg.sizes.sum())
+    total_cut = float(cg.adj.sum()) / 2.0
+    if total_sizes <= 0 or total_cut <= 0:
+        return 1.0
+    base = k * total_cut / (total_sizes * total_sizes / k)
+    w = min(max(weight, 1e-3), 1 - 1e-3)
+    return base * (w / (1 - w))
+
+
+@dataclass
+class GameResult:
+    assign: np.ndarray         # cluster -> partition, int32[m]
+    rounds: int
+    potential_trace: list
+    moves: int
+
+
+def potential(cg: ClusterGraph, assign: np.ndarray, k: int,
+              lam: float) -> float:
+    """Φ(Λ) (Definition 4)."""
+    loads = np.bincount(assign, weights=cg.sizes, minlength=k)
+    load_term = lam / (2.0 * k) * float((loads ** 2).sum())
+    A = cg.adj.tocoo()
+    cross = float(A.data[assign[A.row] != assign[A.col]].sum()) / 2.0
+    # cross counts each undirected-symmetrized pair once ⇒ Σ_p |e(p,V\p)| =
+    # (directed cross edges) = cross  (adj = W+Wᵀ, /2 restores W totals)
+    return load_term + 0.5 * cross
+
+
+def global_cost(cg: ClusterGraph, assign: np.ndarray, k: int,
+                lam: float) -> float:
+    """φ(Λ) (Eq. 10)."""
+    loads = np.bincount(assign, weights=cg.sizes, minlength=k)
+    load_term = lam / k * float((loads ** 2).sum())
+    A = cg.adj.tocoo()
+    cross = float(A.data[assign[A.row] != assign[A.col]].sum()) / 2.0
+    return load_term + cross
+
+
+def best_response_rounds(cg: ClusterGraph, k: int, lam: float | None = None,
+                         batch_size: int | None = None,
+                         max_rounds: int = 64, seed: int = 0,
+                         track_potential: bool = False,
+                         base_loads: np.ndarray | None = None) -> GameResult:
+    """Alg. 3 with the paper's §V-D batching.
+
+    Batches are the parallel unit (one per thread/device).  A batch plays
+    *sequentially* (Gauss–Seidel) against the live load table; the cut-mass
+    table ``A`` is refreshed per batch (threads see a per-batch snapshot of
+    other players' choices — the paper's shared-nothing approximation).
+    ``batch_size=None`` ⇒ one batch = fully sequential best response with a
+    guaranteed monotone potential (exact potential game, Thm 4).
+
+    ``base_loads`` adds exogenous per-partition load (used by the Mint-like
+    baseline's sliding window and by the distributed pipeline where other
+    nodes' loads are synced in).
+    """
+    m = cg.m
+    if m == 0:
+        return GameResult(np.zeros(0, np.int32), 0, [], 0)
+    if lam is None:
+        lam = lambda_max(cg, k)
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, k, size=m).astype(np.int64)   # Alg.3 line 2
+    sizes = cg.sizes.astype(np.float64)
+    loads = np.bincount(assign, weights=sizes, minlength=k)
+    if base_loads is not None:
+        loads = loads + base_loads.astype(np.float64)
+    S = cg.adj.astype(np.float64)
+    indptr, indices, data = S.indptr, S.indices, S.data
+    row_tot = np.asarray(S.sum(axis=1)).ravel().astype(np.float64)
+    if batch_size is None:
+        batch_size = m
+    trace = []
+    total_moves = 0
+    ar = np.arange(k)
+    for rnd in range(max_rounds):
+        moved = 0
+        for lo in range(0, m, batch_size):
+            hi = min(m, lo + batch_size)
+            for i in range(lo, hi):          # Gauss–Seidel sweep (live state)
+                sz = sizes[i]
+                cur = assign[i]
+                nbrs = indices[indptr[i]:indptr[i + 1]]
+                w = data[indptr[i]:indptr[i + 1]]
+                # cut mass into each partition: A[p] = Σ_{j: a_j=p} S[i,j]
+                aff = np.bincount(assign[nbrs], weights=w, minlength=k)
+                loads_ex = loads - sz * (ar == cur)
+                cost = (lam / k) * sz * (loads_ex + sz) \
+                    + 0.5 * (row_tot[i] - aff)
+                best = int(np.argmin(cost))
+                if cost[best] + 1e-9 < cost[cur]:
+                    loads[cur] -= sz
+                    loads[best] += sz
+                    assign[i] = best
+                    moved += 1
+        total_moves += moved
+        if track_potential:
+            trace.append(potential(cg, assign, k, lam))
+        if moved == 0:
+            return GameResult(assign.astype(np.int32), rnd + 1, trace,
+                              total_moves)
+    return GameResult(assign.astype(np.int32), max_rounds, trace, total_moves)
+
+
+def greedy_assign(cg: ClusterGraph, k: int) -> np.ndarray:
+    """CLUGP-G ablation (§VI-B): big clusters → least-loaded partitions."""
+    order = np.argsort(-cg.sizes)
+    loads = np.zeros(k, dtype=np.int64)
+    assign = np.zeros(cg.m, dtype=np.int32)
+    for c in order:
+        p = int(np.argmin(loads))
+        assign[c] = p
+        loads[p] += int(cg.sizes[c])
+    return assign
+
+
+# ---------------------------------------------------------------------------
+# JAX batched best-response round (dense adjacency) — jit/shard_map building
+# block; the Pallas kernel in repro.kernels.game_bestresponse implements the
+# same contraction with CSR tiles.
+# ---------------------------------------------------------------------------
+
+def jax_best_response_round(S, sizes, assign, loads, k: int, lam: float,
+                            batch_slice=None):
+    """One Jacobi batch update.  S: dense (b, m) adjacency rows of the batch,
+    sizes: (b,), assign_all: (m,), loads: (k,). Returns new batch assign."""
+    onehot = jax.nn.one_hot(assign, k, dtype=S.dtype)         # (m, k)
+    A = S @ onehot                                            # (b, k)
+    row_tot = S.sum(axis=1, keepdims=True)
+    if batch_slice is None:
+        cur = assign
+        sz = sizes[:, None]
+    else:
+        cur = jax.lax.dynamic_slice_in_dim(assign, batch_slice, S.shape[0])
+        sz = jax.lax.dynamic_slice_in_dim(sizes, batch_slice, S.shape[0])[:, None]
+    loads_ex = loads[None, :] - sz * jax.nn.one_hot(cur, k, dtype=S.dtype)
+    cost = (lam / k) * sz * (loads_ex + sz) + 0.5 * (row_tot - A)
+    return jnp.argmin(cost, axis=1).astype(jnp.int32)

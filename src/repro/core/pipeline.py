@@ -1,0 +1,127 @@
+"""The CLUGP three-pass pipeline (paper §III) + the parallel variant.
+
+``clugp_partition`` = streaming clustering → cluster-partitioning game →
+partition transformation.  Ablations: ``split=False`` (CLUGP-S),
+``game=False`` (CLUGP-G, greedy cluster placement).
+
+``clugp_partition_parallel`` mirrors §III-C's distributed mode: the edge
+stream is split across ``n_nodes`` (each node clusters + games its local
+sub-stream against a private id space) and the per-node edge assignments are
+concatenated — the paper's "combine partial partitioning results".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .clustering import (ClusteringResult, default_vmax,
+                         streaming_clustering_np)
+from .game import (ClusterGraph, best_response_rounds, contract,
+                   greedy_assign, lambda_from_weight, lambda_max)
+from .transform import transform_np
+from . import metrics
+
+
+@dataclass
+class CLUGPConfig:
+    k: int
+    tau: float = 1.0
+    vmax: float | None = None          # default |E|/k (paper §VI-A)
+    split: bool = True                 # CLUGP-S ablation switch
+    game: bool = True                  # CLUGP-G ablation switch
+    split_degree_factor: float = 0.0   # 0 = paper-faithful; 4 = optimized
+    batch_size: int = 6400             # paper §VI-A default
+    max_rounds: int = 64
+    relative_weight: float | None = None   # Fig. 11b sweep; None ⇒ λ_max
+    effective_sizes: bool = False      # beyond-paper: balance |c_i|+boundary
+    seed: int = 0
+
+    @staticmethod
+    def paper(k: int, **kw) -> "CLUGPConfig":
+        """Paper-faithful profile (§VI-A defaults)."""
+        return CLUGPConfig(k=k, **kw)
+
+    @staticmethod
+    def optimized(k: int, **kw) -> "CLUGPConfig":
+        """Beyond-paper profile: the game balances *effective* cluster sizes
+        (intra + expected landing of boundary edges) so transform loads match
+        game loads — cuts the overflow-spill fraction 2-4× (EXPERIMENTS.md
+        §Perf-partitioner); τ=1.1 gives the spill headroom Fig. 11a studies."""
+        kw.setdefault("tau", 1.1)
+        kw.setdefault("effective_sizes", True)
+        return CLUGPConfig(k=k, **kw)
+
+
+@dataclass
+class CLUGPResult:
+    assign: np.ndarray
+    clustering: ClusteringResult
+    cluster_graph: ClusterGraph
+    cluster_assign: np.ndarray
+    game_rounds: int
+    stats: dict = field(default_factory=dict)
+
+
+def clugp_partition(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+                    cfg: CLUGPConfig) -> CLUGPResult:
+    E = src.shape[0]
+    vmax = cfg.vmax if cfg.vmax is not None else default_vmax(E, cfg.k)
+    # Pass 1: streaming clustering
+    clus = streaming_clustering_np(src, dst, num_vertices, vmax,
+                                   allow_split=cfg.split,
+                                   split_degree_factor=cfg.split_degree_factor)
+    # Pass 2: cluster partitioning
+    cg = contract(src, dst, clus.clu)
+    game_cg = cg
+    if cfg.effective_sizes:
+        boundary = np.asarray(cg.adj.sum(axis=1)).ravel()
+        game_cg = ClusterGraph(cg.sizes + boundary, cg.adj,
+                               cg.vertex_cluster, cg.m)
+    if cfg.game:
+        lam = (lambda_max(game_cg, cfg.k) if cfg.relative_weight is None
+               else lambda_from_weight(game_cg, cfg.k, cfg.relative_weight))
+        game = best_response_rounds(game_cg, cfg.k, lam=lam,
+                                    batch_size=cfg.batch_size,
+                                    max_rounds=cfg.max_rounds, seed=cfg.seed)
+        cluster_assign, rounds = game.assign, game.rounds
+    else:
+        cluster_assign, rounds = greedy_assign(game_cg, cfg.k), 0
+    # Pass 3: transformation
+    vertex_part = cluster_assign[np.maximum(clus.clu, 0)].astype(np.int32)
+    assign = transform_np(src, dst, vertex_part, clus.deg, clus.divided,
+                          cfg.k, cfg.tau)
+    res = CLUGPResult(assign, clus, cg, cluster_assign, rounds)
+    res.stats = metrics.summarize(src, dst, assign, num_vertices, cfg.k)
+    res.stats["num_clusters"] = clus.num_clusters
+    res.stats["game_rounds"] = rounds
+    return res
+
+
+def clugp_partition_parallel(src: np.ndarray, dst: np.ndarray,
+                             num_vertices: int, cfg: CLUGPConfig,
+                             n_nodes: int = 4) -> CLUGPResult:
+    """Distributed mode (§III-C): split the stream, run the three passes per
+    node on its slice, concatenate the edge assignments."""
+    E = src.shape[0]
+    bounds = np.linspace(0, E, n_nodes + 1).astype(np.int64)
+    assign = np.zeros(E, dtype=np.int32)
+    rounds = 0
+    clusters = 0
+    last = None
+    for i in range(n_nodes):
+        lo, hi = bounds[i], bounds[i + 1]
+        if hi <= lo:
+            continue
+        sub_cfg = CLUGPConfig(**{**cfg.__dict__})
+        sub = clugp_partition(src[lo:hi], dst[lo:hi], num_vertices, sub_cfg)
+        assign[lo:hi] = sub.assign
+        rounds = max(rounds, sub.game_rounds)
+        clusters += sub.clustering.num_clusters
+        last = sub
+    res = CLUGPResult(assign, last.clustering, last.cluster_graph,
+                      last.cluster_assign, rounds)
+    res.stats = metrics.summarize(src, dst, assign, num_vertices, cfg.k)
+    res.stats["num_clusters"] = clusters
+    res.stats["game_rounds"] = rounds
+    return res

@@ -1,0 +1,165 @@
+"""Vertex-cut partition layout: from an edge→partition assignment to the
+static padded per-device tables the GAS engine runs on.
+
+PowerGraph semantics (paper §II-B): each vertex that appears in several
+partitions has one **master** replica (here: the partition holding most of
+its edges, ties → lowest id) and mirrors elsewhere.  Per GAS iteration the
+mirrors' partial aggregates flow to the master (gather), the master applies
+the update, and the new value flows back (scatter) — the two all_gather
+phases below.  Communication per iteration is therefore proportional to the
+number of mirrors, i.e. to (RF − 1)·|V| — the quantity CLUGP minimizes.
+
+All tables are padded to static shapes so the engine jits/shard_maps:
+
+  edge_src/edge_dst (k, E_max)  local-slot endpoints, padded with L_max
+  vert_gid          (k, L_max)  local slot → global vertex id (pad: V)
+  owner / own_slot  (k, L_max)  master device + slot there
+  red_index         (k, k·L_max) flat all_gather entry → my owned slot
+  out_deg           (k, L_max)  global out-degree (pagerank)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+
+import numpy as np
+
+
+@dataclass
+class PartitionLayout:
+    k: int
+    num_vertices: int
+    num_edges: int
+    e_max: int
+    l_max: int
+    edge_src: np.ndarray     # (k, E_max) int32, local slots; pad = l_max
+    edge_dst: np.ndarray     # (k, E_max)
+    edge_mask: np.ndarray    # (k, E_max) bool
+    vert_gid: np.ndarray     # (k, L_max) int32; pad = num_vertices
+    vert_mask: np.ndarray    # (k, L_max) bool
+    is_master: np.ndarray    # (k, L_max) bool
+    owner: np.ndarray        # (k, L_max) int32 master device; pad = 0
+    own_slot: np.ndarray     # (k, L_max) int32 slot in owner's table; pad 0
+    red_index: np.ndarray    # (k, k*L_max) int32 → my slot or l_max (drop)
+    out_deg: np.ndarray      # (k, L_max) int32 global out-degree
+    mirrors_total: int       # Σ_v (|P(v)| − 1)
+
+    def device_arrays(self) -> dict:
+        """The pytree of arrays each device needs (leading k axis)."""
+        return {f: getattr(self, f) for f in
+                ("edge_src", "edge_dst", "edge_mask", "vert_gid",
+                 "vert_mask", "is_master", "owner", "own_slot",
+                 "red_index", "out_deg")}
+
+    # -- communication model (bytes per GAS iteration, per §Fig-8 bench) --
+    def comm_bytes_mirror_sync(self, value_bytes: int = 4) -> int:
+        """all_gather(k, L_max) twice: every device receives k·L_max values
+        per phase — but only mirror slots carry signal; ragged-compressed
+        links would move 2·mirrors·bytes.  We report the padded (actual)
+        and ideal (mirror-only) volumes."""
+        return 2 * self.k * self.k * self.l_max * value_bytes
+
+    def comm_bytes_ideal(self, value_bytes: int = 4) -> int:
+        return 2 * self.mirrors_total * value_bytes
+
+    def comm_bytes_dense(self, value_bytes: int = 4) -> int:
+        """dense psum baseline: ring all-reduce over (V,) per device."""
+        return 2 * (self.k - 1) * self.num_vertices * value_bytes
+
+
+def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
+                 num_vertices: int, k: int,
+                 pad_multiple: int = 8) -> PartitionLayout:
+    E = src.shape[0]
+    order = np.argsort(assign, kind="stable")
+    s, d, a = src[order], dst[order], assign[order]
+    bounds = np.searchsorted(a, np.arange(k + 1))
+
+    # global out degree
+    gdeg = np.zeros(num_vertices, dtype=np.int64)
+    np.add.at(gdeg, src, 1)
+
+    # per-partition local vertex tables + master election by edge count
+    locals_: list[np.ndarray] = []
+    counts = np.zeros((0,))
+    vert_count = {}
+    per_part_counts: list[dict] = []
+    for p in range(k):
+        lo, hi = bounds[p], bounds[p + 1]
+        verts, cnt = np.unique(np.concatenate([s[lo:hi], d[lo:hi]]),
+                               return_counts=True)
+        locals_.append(verts)
+        per_part_counts.append(dict(zip(verts.tolist(), cnt.tolist())))
+
+    # master = partition with max edge count of v (ties → lowest partition)
+    best_cnt = np.zeros(num_vertices, dtype=np.int64)
+    master_of = np.full(num_vertices, -1, dtype=np.int64)
+    for p in range(k):
+        verts = locals_[p]
+        cnt = np.array([per_part_counts[p][int(v)] for v in verts],
+                       dtype=np.int64)
+        better = cnt > best_cnt[verts]
+        upd = verts[better]
+        best_cnt[upd] = cnt[better]
+        master_of[upd] = p
+
+    l_max = max((len(v) for v in locals_), default=1)
+    l_max = int(np.ceil(max(l_max, 1) / pad_multiple) * pad_multiple)
+    e_max = int(max(bounds[1:] - bounds[:-1], default=1))
+    e_max = int(np.ceil(max(e_max, 1) / pad_multiple) * pad_multiple)
+
+    vert_gid = np.full((k, l_max), num_vertices, dtype=np.int32)
+    vert_mask = np.zeros((k, l_max), dtype=bool)
+    is_master = np.zeros((k, l_max), dtype=bool)
+    out_deg = np.zeros((k, l_max), dtype=np.int32)
+    slot_of = {}         # (p, gid) -> slot
+    for p in range(k):
+        verts = locals_[p]
+        n = len(verts)
+        vert_gid[p, :n] = verts
+        vert_mask[p, :n] = True
+        is_master[p, :n] = master_of[verts] == p
+        out_deg[p, :n] = gdeg[verts]
+        for sl, v in enumerate(verts.tolist()):
+            slot_of[(p, v)] = sl
+
+    owner = np.zeros((k, l_max), dtype=np.int32)
+    own_slot = np.zeros((k, l_max), dtype=np.int32)
+    for p in range(k):
+        verts = locals_[p]
+        for sl, v in enumerate(verts.tolist()):
+            o = int(master_of[v])
+            owner[p, sl] = o
+            own_slot[p, sl] = slot_of[(o, v)]
+
+    # reduce map: flat all_gather entry (j*L_max + slot) → my slot (if I am
+    # the owner of that entry's vertex) else l_max (dropped)
+    red_index = np.full((k, k * l_max), l_max, dtype=np.int32)
+    for j in range(k):
+        verts = locals_[j]
+        for sl, v in enumerate(verts.tolist()):
+            o = int(master_of[v])
+            red_index[o, j * l_max + sl] = slot_of[(o, v)]
+
+    edge_src = np.full((k, e_max), l_max, dtype=np.int32)
+    edge_dst = np.full((k, e_max), l_max, dtype=np.int32)
+    edge_mask = np.zeros((k, e_max), dtype=bool)
+    for p in range(k):
+        lo, hi = bounds[p], bounds[p + 1]
+        n = hi - lo
+        if n == 0:
+            continue
+        edge_src[p, :n] = [slot_of[(p, int(x))] for x in s[lo:hi]]
+        edge_dst[p, :n] = [slot_of[(p, int(x))] for x in d[lo:hi]]
+        edge_mask[p, :n] = True
+
+    replic = np.zeros(num_vertices, dtype=np.int64)
+    for p in range(k):
+        replic[locals_[p]] += 1
+    mirrors_total = int(np.maximum(replic - 1, 0).sum())
+
+    return PartitionLayout(
+        k=k, num_vertices=num_vertices, num_edges=E, e_max=e_max,
+        l_max=l_max, edge_src=edge_src, edge_dst=edge_dst,
+        edge_mask=edge_mask, vert_gid=vert_gid, vert_mask=vert_mask,
+        is_master=is_master, owner=owner, own_slot=own_slot,
+        red_index=red_index, out_deg=out_deg, mirrors_total=mirrors_total)

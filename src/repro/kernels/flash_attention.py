@@ -1,0 +1,108 @@
+"""Flash attention (causal, GQA) — Pallas TPU kernel.
+
+TPU adaptation (vs. the CUDA original): the grid's minor-most dimension is
+the KV-block index and TPU grids execute sequentially per core, so the
+online-softmax state (m, l, acc) lives in VMEM scratch carried across KV
+steps — no atomics, no shared-memory tiling.  GQA is folded into the
+BlockSpec index maps (q-head → kv-head), so expanded K/V are never
+materialized in HBM.  Block shapes default to (128, head_dim) — MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, block_q: int, block_kv: int,
+                  causal: bool, kv_steps: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale     # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qb * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            kpos = kb * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip fully-masked blocks (kv block entirely after the q block)
+        @pl.when(kb * block_kv <= qb * block_q + block_q - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(kb == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Sq % block_q == 0 and Skv % block_kv == 0, (Sq, Skv)
+    assert Hq % Hkv == 0
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    kv_steps = Skv // block_kv
+    grid = (B, Hq, Sq // block_q, kv_steps)
+    group = Hq // Hkv
+
+    kern = functools.partial(
+        _flash_kernel, sm_scale=scale, block_q=block_q, block_kv=block_kv,
+        causal=causal, kv_steps=kv_steps)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, qb, kb: (b, h, qb, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, qb, kb: (b, h // group, kb, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, qb, kb: (b, h // group, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qb, kb: (b, h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

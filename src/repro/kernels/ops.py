@@ -1,0 +1,42 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) — the kernel body
+executes in Python for correctness validation; on TPU the same call sites
+pass interpret=False and get the compiled Mosaic kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .game_bestresponse import game_bestresponse as _gbr
+from .ell_spmv import ell_spmv as _spmv
+
+_ON_TPU = jax.default_backend() == "tpu"
+DEFAULT_INTERPRET = not _ON_TPU
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                   "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128,
+                    interpret: bool = DEFAULT_INTERPRET):
+    return _flash(q, k, v, causal=causal, block_q=block_q,
+                  block_kv=block_kv, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("lam", "k", "block_m", "interpret"))
+def game_best_response(aff, sizes, row_tot, cur, loads, lam: float,
+                       k: int | None = None, block_m: int = 256,
+                       interpret: bool = DEFAULT_INTERPRET):
+    return _gbr(aff, sizes, row_tot, cur, loads, lam=lam, k=k,
+                block_m=block_m, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def ell_spmv(vals, cols, x, block_m: int = 256,
+             interpret: bool = DEFAULT_INTERPRET):
+    return _spmv(vals, cols, x, block_m=block_m, interpret=interpret)

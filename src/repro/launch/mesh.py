@@ -1,0 +1,25 @@
+"""Production mesh construction (assignment §MULTI-POD DRY-RUN).
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state.  Callers that need 512 host devices must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import
+(launch/dryrun.py does; tests spawn subprocesses)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for multi-device subprocess tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_graph_mesh(k: int):
+    """The graph engine's mesh: k partitions on one flat axis."""
+    return jax.make_mesh((k,), ("parts",))

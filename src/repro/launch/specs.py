@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+Shapes (assignment sheet):
+  train_4k     seq_len=4096    global_batch=256   (training)
+  prefill_32k  seq_len=32768   global_batch=32    (inference-prefill)
+  decode_32k   seq_len=32768   global_batch=128   (decode: 1 new token)
+  long_500k    seq_len=524288  global_batch=1     (long-context decode —
+               sub-quadratic archs only; full-attention archs are recorded
+               as skipped, see DESIGN.md §Arch-applicability)
+
+``decode_*``/``long_*`` lower ``serve_step`` (decode_step with a KV cache of
+seq_len); encoder-decoder decodes against a stubbed encoder memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_cache
+from repro.models.config import ModelConfig as MC
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cell_is_skipped(cfg: ModelConfig, shape_name: str) -> str | None:
+    """Returns a skip reason or None."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "skipped(full-attention: 500k dense KV is out of scope)"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mp: int = 1,
+                dtype=jnp.bfloat16) -> dict:
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            half = S // 2
+            batch = {"src_embeds": sds((B, half, cfg.d_model), dtype),
+                     "tokens": sds((B, half), i32)}
+            if kind == "train":
+                batch["labels"] = sds((B, half), i32)
+            return {"batch": batch}
+        if cfg.family == "vlm":
+            P = cfg.prefix_tokens
+            batch = {"prefix_embeds": sds((B, P, cfg.d_model), dtype),
+                     "tokens": sds((B, S - P), i32)}
+            if kind == "train":
+                batch["labels"] = sds((B, S), i32)
+            return {"batch": batch}
+        batch = {"tokens": sds((B, S), i32)}
+        if kind == "train":
+            batch["labels"] = sds((B, S), i32)
+        return {"batch": batch}
+
+    # decode: token + cache (+ encoder memory for encdec)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, mp=mp, dtype=dtype))
+    out = {"tokens": sds((B, 1), i32), "cache": cache,
+           "index": sds((), i32)}
+    if cfg.family == "encdec":
+        out["memory"] = sds((B, S // 2, cfg.d_model), dtype)
+    return out

@@ -1,0 +1,5 @@
+"""Pure-functional model stack for the 10 assigned architectures."""
+from .config import ModelConfig, MoEConfig, MLAConfig, SSMConfig  # noqa: F401
+from .lm import (init_params, abstract_params, forward, forward_train,  # noqa: F401
+                 prefill, decode_step, init_cache, layer_groups,
+                 param_count, lm_loss)

@@ -1,0 +1,167 @@
+"""Attention: GQA (optional QKV bias, RoPE) and MLA (DeepSeek latent KV).
+
+Memory discipline on TPU:
+- training/prefill uses block-chunked online-softmax attention
+  (``chunked_attention`` — the pure-jnp form of the flash kernel in
+  repro.kernels.flash_attention; same math, bounded VMEM-sized blocks);
+- decode uses a sequence-sharded KV cache with a logsumexp merge across
+  shards (flash-decoding adapted to TPU collectives) — see repro.dist.decode.
+
+Head padding: Q heads are padded up to a multiple of the model-axis size so
+head-sharded einsums always divide the mesh; padded heads carry zero weights
+(their FLOPs show up in the roofline's MODEL_FLOPS/HLO ratio — hillclimb #2
+removes them).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_rope, linear, linear_init, round_up
+
+NEG_INF = -1e30
+
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             qkv_bias: bool = False, pad_heads_to: int = 1,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    hp = round_up(n_heads, pad_heads_to)
+    kvp = n_kv if n_kv % pad_heads_to == 0 else n_kv  # replicate if uneven
+    return {
+        "q": linear_init(ks[0], d_model, hp * head_dim, qkv_bias, dtype),
+        "k": linear_init(ks[1], d_model, kvp * head_dim, qkv_bias, dtype),
+        "v": linear_init(ks[2], d_model, kvp * head_dim, qkv_bias, dtype),
+        "o": linear_init(ks[3], hp * head_dim, d_model, False, dtype),
+    }
+
+
+def gqa_project(p: Params, x, *, n_heads, n_kv, head_dim, pad_heads_to,
+                positions, rope_theta=10000.0):
+    B, S, _ = x.shape
+    hp = round_up(n_heads, pad_heads_to)
+    q = linear(p["q"], x).reshape(B, S, hp, head_dim)
+    k = linear(p["k"], x).reshape(B, S, n_kv, head_dim)
+    v = linear(p["v"], x).reshape(B, S, n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def expand_kv(k, n_q_heads_padded: int):
+    """(B,S,Hkv,Dh) → (B,S,Hq,Dh) by repeating groups (padded heads reuse
+    group 0 — their Q weights are zero so the result is exact)."""
+    B, S, hkv, dh = k.shape
+    reps = -(-n_q_heads_padded // hkv)
+    k = jnp.repeat(k, reps, axis=2)[:, :, :n_q_heads_padded]
+    return k
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                      block_kv: int = 1024, sm_scale: float | None = None,
+                      unroll: bool = False):
+    """Online-softmax attention, O(S·block) memory.  q: (B,Sq,H,Dh),
+    k/v: (B,Skv,H,Dh) (already group-expanded).  Returns (B,Sq,H,Dh)."""
+    B, Sq, H, Dh = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[1]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dh)
+    qf = (q * scale).astype(jnp.float32).transpose(0, 2, 1, 3)  # B,H,Sq,Dh
+    kf = k.astype(jnp.float32).transpose(0, 2, 3, 1)            # B,H,Dh,Skv
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)            # B,H,Skv,Dv
+    nblk = -(-Skv // block_kv)
+    pad = nblk * block_kv - Skv
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kf.reshape(B, H, Dh, nblk, block_kv).transpose(3, 0, 1, 2, 4)
+    vb = vf.reshape(B, H, nblk, block_kv, Dv).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l, acc, idx = carry
+        kblk, vblk = blk
+        s = qf @ kblk                                  # (B,H,Sq,block)
+        kpos = idx * block_kv + jnp.arange(block_kv)
+        mask = kpos[None, :] < Skv
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + pexp.sum(-1)
+        acc_new = acc * alpha[..., None] + pexp @ vblk
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, jnp.int32(0)),
+                                     (kb, vb), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                   sm_scale: float | None = None):
+    """Reference einsum attention (small S; oracle for kernels/tests)."""
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        mask = jnp.arange(Skv)[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------- MLA
+
+def mla_init(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             nope_dim: int, rope_dim: int, v_dim: int,
+             pad_heads_to: int = 1, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    hp = round_up(n_heads, pad_heads_to)
+    return {
+        "q_a": linear_init(ks[0], d_model, q_lora, dtype=dtype),
+        "q_b": linear_init(ks[1], q_lora, hp * (nope_dim + rope_dim),
+                           dtype=dtype),
+        "kv_a": linear_init(ks[2], d_model, kv_lora + rope_dim, dtype=dtype),
+        "kv_b": linear_init(ks[3], kv_lora, hp * (nope_dim + v_dim),
+                            dtype=dtype),
+        "o": linear_init(ks[4], hp * v_dim, d_model, dtype=dtype),
+    }
+
+
+def mla_attention(p: Params, x, *, n_heads, q_lora, kv_lora, nope_dim,
+                  rope_dim, v_dim, pad_heads_to, positions, causal=True,
+                  block_kv: int = 1024):
+    """DeepSeek-V3 Multi-head Latent Attention (decompressed compute form).
+    The latent cache form (cache kv_a output only) is used on the decode
+    path — see repro.dist.decode.mla_decode."""
+    B, S, _ = x.shape
+    hp = round_up(n_heads, pad_heads_to)
+    q = linear(p["q_b"], linear(p["q_a"], x)).reshape(
+        B, S, hp, nope_dim + rope_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    kv = linear(p["kv_a"], x)
+    latent, k_rope = kv[..., :kv_lora], kv[..., kv_lora:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions)     # shared head
+    q_rope = apply_rope(q_rope, positions)
+    kvb = linear(p["kv_b"], latent).reshape(B, S, hp, nope_dim + v_dim)
+    k_nope, v = kvb[..., :nope_dim], kvb[..., nope_dim:]
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope,
+                          jnp.broadcast_to(k_rope, (B, S, hp, rope_dim))], -1)
+    scale = 1.0 / math.sqrt(nope_dim + rope_dim)
+    out = chunked_attention(qf, kf, v, causal=causal, block_kv=block_kv,
+                            sm_scale=scale)
+    return linear(p["o"], out.reshape(B, S, hp * v_dim))

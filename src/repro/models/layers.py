@@ -1,0 +1,117 @@
+"""Pure-functional building blocks (no flax): params are nested dicts of
+jnp arrays; every module is (init, apply) pairs.  Sharding is expressed
+with jax.lax.with_sharding_constraint using logical axis rules resolved by
+repro.dist.sharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), dtype) / math.sqrt(d_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["table"].astype(x.dtype).T
+
+
+# --------------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, max_pos: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)                      # (max_pos, head_dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def gelu_ffn_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+def ffn_init(key, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {"gate": linear_init(ks[0], d_model, d_ff, dtype=dtype),
+                "up": linear_init(ks[1], d_model, d_ff, dtype=dtype),
+                "down": linear_init(ks[2], d_ff, d_model, dtype=dtype)}
+    return {"up": linear_init(ks[0], d_model, d_ff, dtype=dtype),
+            "down": linear_init(ks[1], d_ff, d_model, dtype=dtype)}
+
+
+def ffn(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "gate" in p:
+        return linear(p["down"], swiglu(linear(p["gate"], x),
+                                        linear(p["up"], x)))
+    return gelu_ffn_apply(p, x)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

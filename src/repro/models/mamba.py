@@ -1,0 +1,169 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) — chunked form.
+
+The SSD layer computes, per head h with scalar decay a_t = exp(-softplus(Δ_t)A):
+    y_t = Σ_{s≤t} (Π_{r=s+1..t} a_r) · (C_t·B_s) · x_s   + D·x_t
+which the chunked algorithm evaluates as (intra-chunk quadratic) +
+(inter-chunk recurrent state passing) — O(S·C) instead of O(S²).
+
+Used by ``mamba2-130m`` and the Mamba blocks of ``jamba-1.5-large``.
+``d_inner`` (heads) shards over the ``model`` axis; the scan carries only
+(B, H, dh, N) state so no collectives appear inside the layer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+def ssd_init(key, d_model: int, d_inner: int, d_state: int, head_dim: int,
+             dtype=jnp.float32) -> Params:
+    """Separate x/z/BC/dt projections (not the fused in_proj of the
+    reference impl) so the d_inner outputs shard cleanly on the model axis
+    while the small B/C/dt heads replicate."""
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "x_proj": linear_init(ks[0], d_model, d_inner, dtype=dtype),
+        "z_proj": linear_init(ks[1], d_model, d_inner, dtype=dtype),
+        "bc_proj": linear_init(ks[2], d_model, 2 * d_state, dtype=dtype),
+        "dt_proj": linear_init(ks[3], d_model, n_heads, dtype=dtype),
+        "out_proj": linear_init(ks[4], d_inner, d_model, dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(dtype)),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "norm": rmsnorm_init(d_inner, dtype),
+    }
+
+
+def _project(p: Params, x, d_state: int):
+    xi = linear(p["x_proj"], x)
+    z = linear(p["z_proj"], x)
+    bc = linear(p["bc_proj"], x)
+    B, C = bc[..., :d_state], bc[..., d_state:]
+    dt = linear(p["dt_proj"], x)
+    return xi, z, B, C, dt
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int = 128,
+                unroll: bool = False):
+    """Chunked SSD scan.
+    x: (b, S, H, dh); dt: (b, S, H) post-softplus; A: (H,) (negative);
+    B, C: (b, S, N).  Returns (b, S, H, dh)."""
+    b, S, H, dh = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, "sequence must be divisible by chunk"
+    xc = x.reshape(b, nc, chunk, H, dh)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]               # (b,nc,c,H) log-decay ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumulative
+    total = cum[:, :, -1, :]                        # (b,nc,H)
+
+    # ----- intra-chunk (quadratic within chunk) -----
+    # decay(t,s) = exp(cum_t - cum_s) for s ≤ t — mask BEFORE exp: the
+    # upper triangle is positive and would overflow (NaN grads through
+    # the where otherwise).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bgtn,bgsn->bgts", Cc, Bc)        # (b,nc,t,s)
+    w = scores[..., None] * decay                          # (b,nc,t,s,H)
+    xin = xc * dtc[..., None]                              # Δ-weighted input
+    y_intra = jnp.einsum("bgtsh,bgshd->bgthd", w, xin)
+
+    # ----- chunk states -----
+    # state_g = Σ_s exp(total_g - cum_s) · B_s ⊗ (Δ_s x_s)
+    sdecay = jnp.exp(total[:, :, None, :] - cum)           # (b,nc,c,H)
+    state = jnp.einsum("bgsn,bgsh,bgshd->bghnd", Bc, sdecay, xin)
+
+    # ----- inter-chunk recurrence (scan over chunks) -----
+    def step(carry, inp):
+        st_prev = carry                                    # (b,H,N,dh)
+        st_g, tot_g = inp                                  # (b,H,N,dh),(b,H)
+        st_new = st_prev * jnp.exp(tot_g)[:, :, None, None] + st_g
+        return st_new, st_prev
+
+    st0 = jnp.zeros((b, H, N, dh), x.dtype)
+    _, prev_states = jax.lax.scan(
+        step, st0,
+        (state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+        unroll=unroll)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (b,nc,H,N,dh)
+
+    # contribution of carried state: y_t += C_t · exp(cum_t) · st_prev
+    y_inter = jnp.einsum("bgtn,bgth,bghnd->bgthd",
+                         Cc, jnp.exp(cum), prev_states)
+
+    y = (y_intra + y_inter).reshape(b, S, H, dh)
+    return y + x * D[None, None, :, None]
+
+
+def ssd_reference(x, dt, A, B, C, D):
+    """O(S) sequential oracle (tests)."""
+    b, S, H, dh = x.shape
+    N = B.shape[-1]
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)[..., None, None]          # (b,H,1,1)
+        st = st * decay + jnp.einsum(
+            "bn,bh,bhd->bhnd", Bt, dtt, xt)
+        y = jnp.einsum("bn,bhnd->bhd", Ct, st)
+        return st, y
+
+    st0 = jnp.zeros((b, H, N, dh), x.dtype)
+    _, ys = jax.lax.scan(step, st0, (x.transpose(1, 0, 2, 3),
+                                     dt.transpose(1, 0, 2),
+                                     B.transpose(1, 0, 2),
+                                     C.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3)
+    return y + x * D[None, None, :, None]
+
+
+def ssd_apply(p: Params, x: jnp.ndarray, *, d_inner: int, d_state: int,
+              head_dim: int, chunk: int = 128,
+              unroll: bool = False) -> jnp.ndarray:
+    """Full Mamba-2 block (no conv1d — held in the frontier list): in-proj →
+    SSD → gated RMSNorm → out-proj.  x: (B, S, d_model)."""
+    n_heads = d_inner // head_dim
+    xi, z, B, C, dt = _project(p, x, d_state)
+    bsz, S, _ = xi.shape
+    xi = xi.reshape(bsz, S, n_heads, head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xi.astype(jnp.float32), dt, A,
+                    B.astype(jnp.float32), C.astype(jnp.float32),
+                    p["D"].astype(jnp.float32), chunk=chunk, unroll=unroll)
+    y = y.reshape(bsz, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y)
+
+
+def ssd_decode_step(p: Params, x, state, *, d_inner: int, d_state: int,
+                    head_dim: int):
+    """Single-token decode: x (B, 1, d_model), state (B, H, N, dh)."""
+    n_heads = d_inner // head_dim
+    xi, z, B, C, dt = _project(p, x, d_state)
+    bsz = xi.shape[0]
+    xi = xi.reshape(bsz, n_heads, head_dim)
+    B, C = B[:, 0], C[:, 0]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)[..., None, None]
+    state = state * decay + jnp.einsum("bn,bh,bhd->bhnd", B, dt,
+                                       xi.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnd->bhd", C, state)
+    y = y + xi.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y), state

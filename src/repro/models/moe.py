@@ -1,0 +1,147 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (static shapes).
+
+Routing variants cover the assigned archs:
+- llama4-scout    : 16 experts, top-1 + shared expert
+- deepseek-v3     : 256 routed top-8 (softmax-after-topk, aux-loss-free
+                    bias), 1 shared expert, first-k dense layers
+- jamba-1.5       : 16 experts, top-2 softmax
+
+Expert parallelism: experts live on the ``model`` ("expert") mesh axis; the
+dispatch gather/scatter lowers to all-to-all / collective-permute under
+GSPMD via sharding constraints (verified in the dry-run HLO).  The CLUGP
+bridge (repro.core.expert_placement) permutes the expert→shard map to
+co-locate co-activated experts — the paper's game applied to the
+expert-affinity graph (beyond-paper, DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, ffn, ffn_init, linear, linear_init
+from ..dist.sharding import shard
+
+
+def moe_init(key, d_model: int, d_expert: int, n_experts: int,
+             n_shared: int = 0, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+
+    def bank(key, n):
+        kk = jax.random.split(key, 3)
+        s = 1.0 / math.sqrt(d_model)
+        return {
+            "gate": jax.random.normal(kk[0], (n, d_model, d_expert), dtype) * s,
+            "up": jax.random.normal(kk[1], (n, d_model, d_expert), dtype) * s,
+            "down": jax.random.normal(kk[2], (n, d_expert, d_model), dtype)
+                    / math.sqrt(d_expert),
+        }
+
+    p = {"router": linear_init(ks[0], d_model, n_experts, dtype=dtype),
+         "experts": bank(ks[1], n_experts)}
+    if n_shared:
+        p["shared"] = ffn_init(ks[2], d_model, n_shared * d_expert,
+                               gated=True, dtype=dtype)
+    return p
+
+
+def moe_apply(p: Params, x: jnp.ndarray, *, n_experts: int,
+              top_k: int, capacity_factor: float = 1.25,
+              router_softmax_after_topk: bool = False,
+              router_bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x: (B, S, D) → (B, S, D).  GShard-style *grouped* sort-dispatch:
+    each batch row is a dispatch group with its own capacity, so expert
+    batches are (G, E, C, D) sharded (data, experts, ·, ·) — both mesh axes
+    divide the compute.  (Hillclimb #1, EXPERIMENTS.md §Perf: a global
+    dispatch left (E, C, D) replicated across the 16 data shards — 16×
+    redundant expert FLOPs.)  Tokens over capacity are dropped (GShard
+    semantics); the shared expert (if any) is always-on."""
+    B, S, D = x.shape
+    T = S                                # tokens per group
+    capacity = max(1, int(capacity_factor * T * top_k / n_experts))
+
+    logits = linear(p["router"], x).astype(jnp.float32)     # (B, S, E)
+    sel = logits if router_bias is None else logits + router_bias
+    _, top_idx = jax.lax.top_k(sel, top_k)                  # (B, S, K)
+    if router_softmax_after_topk:
+        gates = jax.nn.softmax(
+            jnp.take_along_axis(logits, top_idx, axis=2), -1)
+    else:
+        gates = jnp.take_along_axis(jax.nn.softmax(logits, -1), top_idx, 2)
+
+    def dispatch_tables(top_g, gate_g):
+        """Per group: (S, K) → token/gate tables of shape (E·C,)."""
+        flat_e = top_g.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+        flat_g = gate_g.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        e_s, t_s, g_s = flat_e[order], flat_t[order], flat_g[order]
+        pos = jnp.arange(T * top_k) - jnp.searchsorted(e_s, e_s)
+        keep = pos < capacity
+        slot = jnp.where(keep, e_s * capacity + pos, n_experts * capacity)
+        tok = jnp.full((n_experts * capacity + 1,), T, jnp.int32)
+        tok = tok.at[slot].set(t_s, mode="drop")[:-1]
+        gat = jnp.zeros((n_experts * capacity + 1,), jnp.float32)
+        gat = gat.at[slot].set(jnp.where(keep, g_s, 0.0), mode="drop")[:-1]
+        return tok, gat
+
+    tok_table, gate_table = jax.vmap(dispatch_tables)(top_idx, gates)
+    # dispatch gather: (B, S+1, D)[g, tok] → (G, E, C, D); under GSPMD the
+    # (data → experts) resharding is the all-to-all.
+    xg = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], 1)
+    ex_in = jnp.take_along_axis(
+        xg, tok_table[..., None].astype(jnp.int32), axis=1
+    ).reshape(B, n_experts, capacity, D)
+    ex_in = shard(ex_in, "batch", "experts", None, None)
+
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ex_in,
+                               w["gate"].astype(ex_in.dtype))) \
+        * jnp.einsum("gecd,edf->gecf", ex_in, w["up"].astype(ex_in.dtype))
+    h = shard(h, "batch", "experts", None, None)
+    ex_out = jnp.einsum("gecf,efd->gecd", h, w["down"].astype(h.dtype))
+    ex_out = shard(ex_out, "batch", "experts", None, None)
+
+    # combine: weighted scatter-add back to each group's tokens
+    flat_out = ex_out.reshape(B, n_experts * capacity, D) \
+        .astype(jnp.float32)
+    weighted = flat_out * gate_table[..., None]
+
+    def combine(tok, wo):
+        y = jnp.zeros((T + 1, D), jnp.float32)
+        return y.at[tok].add(wo)[:T]
+
+    out = jax.vmap(combine)(tok_table, weighted).astype(x.dtype)
+    out = shard(out, "batch", None, None)
+    if "shared" in p:
+        out = out + ffn(p["shared"], x)
+    return out
+
+
+def moe_reference(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+                  router_softmax_after_topk: bool = False,
+                  router_bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """No-capacity oracle: every token visits its top-k experts densely
+    (tiny shapes only — the kernel/test reference)."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    logits = linear(p["router"], xt).astype(jnp.float32)
+    sel = logits if router_bias is None else logits + router_bias
+    _, top_idx = jax.lax.top_k(sel, top_k)
+    if router_softmax_after_topk:
+        gates = jax.nn.softmax(
+            jnp.take_along_axis(logits, top_idx, axis=1), -1)
+    else:
+        gates = jnp.take_along_axis(jax.nn.softmax(logits, -1), top_idx, 1)
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, w["gate"].astype(xt.dtype))) \
+        * jnp.einsum("td,edf->tef", xt, w["up"].astype(xt.dtype))
+    all_out = jnp.einsum("tef,efd->ted", h, w["down"].astype(h.dtype))
+    onehot = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32)  # T,K,E
+    comb = jnp.einsum("tke,tk->te", onehot, gates)
+    out = jnp.einsum("ted,te->td", all_out.astype(jnp.float32), comb)
+    y = out.astype(x.dtype)
+    if "shared" in p:
+        y = y + ffn(p["shared"], xt)
+    return y.reshape(B, S, D)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizers, sharding specs, step builders."""
+from .optimizer import adamw, adafactor, get_optimizer, cosine_schedule, Optimizer  # noqa: F401
+from .shardings import param_specs, named_shardings, batch_specs, cache_specs  # noqa: F401
+from .step import make_train_step, make_prefill_step, make_decode_fn  # noqa: F401

@@ -1,0 +1,127 @@
+"""Optimizers (no optax): AdamW and factored Adafactor.
+
+State trees mirror the parameter tree, so the ZeRO sharding specs of the
+params apply leaf-for-leaf to the optimizer state (Adafactor's factored
+second moment collapses one dim — its specs drop that axis).
+
+Memory per param:  AdamW fp32 m+v = 8 B;  Adafactor (β1=0) ≈ 4 B/(row+col)
+— the ≥100B archs default to Adafactor (see launch/train.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable   # (grads, state, params, step) -> (params, state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def _map_leaves(fn, grads, *rest):
+    """tree_map where ``rest`` trees may have dict-structured per-leaf
+    state: flattens all trees up to grads' structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    rest_leaves = [treedef.flatten_up_to(r) for r in rest]
+    out = [fn(g, *(r[i] for r in rest_leaves))
+           for i, g in enumerate(leaves)]
+    n = len(out[0])
+    return tuple(treedef.unflatten([o[j] for o in out]) for j in range(n))
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          schedule=None):
+    sched = schedule or (lambda s: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), \
+                m2, v2
+
+        p2, m2, v2 = _map_leaves(upd, grads, state["m"], state["v"], params)
+        return p2, {"m": m2, "v": v2}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_rms=1.0,
+              min_factor_dim=128, weight_decay=0.0, schedule=None):
+    """Factored second-moment Adafactor (β1=0, Shazeer & Stern 2018)."""
+    sched = schedule or (lambda s: lr)
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_factor_dim \
+            and p.shape[-2] >= min_factor_dim
+
+    def init(params):
+        def z(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+        beta = 1.0 - stepf ** (-decay)
+
+        def upd(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in f:
+                vr = beta * f["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * f["vc"] + (1 - beta) * g2.mean(-2)
+                denom = vr[..., None] * vc[..., None, :] \
+                    / jnp.maximum(vr.mean(-1)[..., None, None], eps)
+                u = g * jax.lax.rsqrt(denom + eps)
+                f2 = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                f2 = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), f2
+
+        p2, f2 = _map_leaves(upd, grads, state["f"], params)
+        return p2, {"f": f2}
+
+    return Optimizer("adafactor", init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor}[name](**kw)

@@ -1,0 +1,91 @@
+"""train_step / serve_step builders — the functions the dry-run lowers and
+the launchers execute.
+
+Features: microbatch gradient accumulation (lax.scan), remat inside the
+layer scans (models), optional gradient compression (error-feedback int8 —
+repro.dist.compress), optimizer fused in.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as _decode_step
+from repro.models import forward_train, prefill as _prefill
+from repro.models.config import ModelConfig
+from .optimizer import Optimizer
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *, mp: int = 1,
+                    dtype=jnp.bfloat16, micro_batches: int = 1,
+                    block_kv: int = 1024, loss_chunk: int = 512,
+                    compress_grads=None, unroll: bool = False):
+    """Returns train_step(params, opt_state, batch, step) →
+    (params, opt_state, loss)."""
+
+    def loss_fn(params, batch):
+        # cast weights to compute dtype *before* use: the ZeRO all-gathers
+        # then move bf16, not fp32 — 2× collective reduction (hillclimb #2,
+        # EXPERIMENTS.md §Perf).  Cast is differentiable; masters stay fp32.
+        params_c = jax.tree_util.tree_map(
+            lambda p: p.astype(dtype)
+            if (p.ndim >= 2 and p.dtype == jnp.float32) else p, params)
+        return forward_train(params_c, batch, cfg, mp=mp, dtype=dtype,
+                             block_kv=block_kv, loss_chunk=loss_chunk,
+                             unroll=unroll)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch, step):
+        if micro_batches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(micro_batches, b // micro_batches,
+                                 *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc(carry, mb):
+                tot, g = carry
+                l, gi = grad_fn(params, mb)
+                g = jax.tree_util.tree_map(jnp.add, g, gi)
+                return (tot + l, g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.float32(0), zeros), micro)
+            loss = loss / micro_batches
+            grads = jax.tree_util.tree_map(
+                lambda g: g / micro_batches, grads)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, mp: int = 1, dtype=jnp.bfloat16,
+                      block_kv: int = 1024, unroll: bool = False):
+    def prefill_step(params, batch):
+        logits, hidden = _prefill(params, batch, cfg, mp=mp, dtype=dtype,
+                                  block_kv=block_kv, unroll=unroll)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig, *, mp: int = 1, dtype=jnp.bfloat16,
+                   unroll: bool = False):
+    def serve_step(params, cache, tokens, index, memory=None):
+        logits, cache = _decode_step(params, cache, tokens, index, cfg,
+                                     mp=mp, dtype=dtype, memory=memory,
+                                     unroll=unroll)
+        return logits, cache
+
+    return serve_step

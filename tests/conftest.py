@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run ``code`` in a subprocess with n virtual host devices.
+    (XLA device count locks at first jax init, so multi-device paths are
+    exercised out-of-process; the main process keeps 1 device.)"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture
+def multidevice():
+    return run_multidevice

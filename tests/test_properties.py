@@ -1,0 +1,95 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CLUGPConfig, clugp_partition, contract,
+                        best_response_rounds, default_vmax, global_cost,
+                        lambda_max, metrics, potential,
+                        streaming_clustering_np, transform_np)
+from repro.core.graphgen import Graph, _compact
+
+
+@st.composite
+def small_graphs(draw):
+    n = draw(st.integers(8, 60))
+    e = draw(st.integers(n, 4 * n))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    # preferential-ish attachment for power-law-ish degrees
+    src = rng.integers(0, n, e)
+    dst = (rng.zipf(1.8, e) - 1) % n
+    keep = src != dst
+    if keep.sum() < 2:
+        src, dst = np.array([0, 1]), np.array([1, 2])
+    else:
+        src, dst = src[keep], dst[keep]
+    return _compact(src.astype(np.int64), dst.astype(np.int64))
+
+
+@given(small_graphs(), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_partition_is_total_and_balanced(g, k):
+    res = clugp_partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=k))
+    assert res.assign.shape[0] == g.num_edges
+    assert 0 <= res.assign.min() and res.assign.max() < k
+    sizes = np.bincount(res.assign, minlength=k)
+    assert sizes.max() <= int(np.ceil(g.num_edges / k)) + 1   # τ=1 cap
+    rf = metrics.replication_factor(g.src, g.dst, res.assign,
+                                    g.num_vertices, k)
+    assert 1.0 <= rf <= k
+
+
+@given(small_graphs(), st.integers(2, 6))
+@settings(max_examples=25, deadline=None)
+def test_clustering_state_invariants(g, k):
+    vmax = default_vmax(g.num_edges, k)
+    res = streaming_clustering_np(g.src, g.dst, g.num_vertices, vmax)
+    streamed = np.zeros(g.num_vertices, bool)
+    streamed[g.src] = streamed[g.dst] = True
+    streamed &= (g.src != g.dst)[0] or streamed   # keep mask as-is
+    # every streamed vertex has a cluster and correct degree
+    deg = np.zeros(g.num_vertices, np.int64)
+    sl = g.src != g.dst
+    np.add.at(deg, g.src[sl], 1)
+    np.add.at(deg, g.dst[sl], 1)
+    assert (res.clu[deg > 0] >= 0).all()
+    np.testing.assert_array_equal(res.deg, deg)
+    # cluster ids compact
+    used = np.unique(res.clu[res.clu >= 0])
+    assert used.shape[0] == res.num_clusters
+    np.testing.assert_array_equal(used, np.arange(res.num_clusters))
+    # replicas only on divided vertices
+    assert (res.replicas[~res.divided] == 0).all()
+
+
+@given(small_graphs(), st.integers(2, 6), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_game_monotone_potential_and_cost_sandwich(g, k, seed):
+    clus = streaming_clustering_np(g.src, g.dst, g.num_vertices,
+                                   default_vmax(g.num_edges, k))
+    cg = contract(g.src, g.dst, clus.clu)
+    if cg.m == 0:
+        return
+    lam = lambda_max(cg, k)
+    res = best_response_rounds(cg, k, lam=lam, batch_size=None,
+                               track_potential=True, seed=seed)
+    tr = res.potential_trace
+    assert all(b <= a + 1e-6 for a, b in zip(tr, tr[1:]))
+    phi = potential(cg, res.assign, k, lam)
+    cost = global_cost(cg, res.assign, k, lam)
+    assert phi - 1e-9 <= cost <= 2 * phi + 1e-9        # Thm 8 lemma
+
+
+@given(small_graphs(), st.integers(2, 6),
+       st.floats(1.0, 2.0))
+@settings(max_examples=20, deadline=None)
+def test_transform_respects_tau(g, k, tau):
+    clus = streaming_clustering_np(g.src, g.dst, g.num_vertices,
+                                   default_vmax(g.num_edges, k))
+    cg = contract(g.src, g.dst, clus.clu)
+    res = best_response_rounds(cg, k, batch_size=None)
+    vp = res.assign[np.maximum(clus.clu, 0)].astype(np.int32)
+    assign = transform_np(g.src, g.dst, vp, clus.deg, clus.divided, k, tau)
+    sizes = np.bincount(assign, minlength=k)
+    lmax = tau * g.num_edges / k
+    assert sizes.max() <= int(np.ceil(lmax)) + 1
