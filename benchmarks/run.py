@@ -3,6 +3,7 @@ Prints ``name,us_per_call,derived`` CSV rows + writes results/bench.json.
 
   PYTHONPATH=src python -m benchmarks.run            # full suite
   PYTHONPATH=src python -m benchmarks.run --quick    # smaller graphs
+  PYTHONPATH=src python -m benchmarks.run --tiny --tag smoke   # CI smoke
 """
 from __future__ import annotations
 
@@ -18,7 +19,12 @@ RESULTS = Path(__file__).resolve().parents[1] / "results"
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke profile: scale-8 graphs, k=4, core "
+                         "suites only (seconds, not minutes)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--tag", default=None,
+                    help="also write results/BENCH_<tag>.json")
     args = ap.parse_args()
     scale = 11 if args.quick else 12
 
@@ -26,6 +32,19 @@ def main() -> None:
     from .bench_pagerank import fig8_pagerank
     from .bench_kernels import kernels_microbench
     from .bench_expert_placement import expert_placement_bench
+
+    if args.tiny:
+        suites = {
+            "fig3_rf_web": lambda: bp.fig3_rf_vs_partitions(
+                scale=8, ks=(4,)),
+            "fig7_runtime": lambda: bp.fig7_runtime_vs_k(
+                scale=8, ks=(4,)),
+            "fig8_pagerank": lambda: fig8_pagerank(scale=8, k=4, iters=10),
+            "expert_placement": lambda: expert_placement_bench(
+                E=16, K=2, shards=4),
+        }
+        run_suites(suites, args)
+        return
 
     suites = {
         "fig3_rf_web": lambda: bp.fig3_rf_vs_partitions(scale=scale),
@@ -41,6 +60,10 @@ def main() -> None:
         "kernels": kernels_microbench,
         "expert_placement": expert_placement_bench,
     }
+    run_suites(suites, args)
+
+
+def run_suites(suites: dict, args) -> None:
     if args.only:
         suites = {k: v for k, v in suites.items() if args.only in k}
 
@@ -63,6 +86,9 @@ def main() -> None:
                   f"{derived}")
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "bench.json").write_text(json.dumps(all_rows, indent=1))
+    if args.tag:
+        (RESULTS / f"BENCH_{args.tag}.json").write_text(
+            json.dumps(all_rows, indent=1))
 
     # roofline summary appended if dry-run records exist
     try:

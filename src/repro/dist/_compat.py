@@ -1,0 +1,26 @@
+"""Forward-compat shims for older jax (container pins 0.4.x).
+
+``jax.shard_map`` with the ``check_vma`` kwarg landed after 0.4.37; the
+tests and newer call sites use that spelling, so alias it onto
+``jax.experimental.shard_map.shard_map`` (whose equivalent kwarg is
+``check_rep``) when missing.  Import order is safe: every ``repro.dist``
+consumer imports this package before touching ``jax.shard_map``.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  check_rep=None, **kwargs):
+        if check_rep is None:
+            check_rep = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep,
+                          **kwargs)
+
+    jax.shard_map = shard_map

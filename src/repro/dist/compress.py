@@ -1,0 +1,67 @@
+"""Error-feedback gradient compression (int8) for cross-partition reduces.
+
+The partitioning logic of the paper cuts mirror traffic by lowering the
+replication factor; this module cuts the *per-mirror payload*: gradients
+quantize to int8 (max-abs per-tensor scale) before the reduce, and the
+quantization error is carried in a residual that is re-added next step
+(error feedback), so the time-averaged update is unbiased.
+
+API:
+  zero_residual(tree)                    — initial residual state
+  compress_with_error_feedback(g, res)   — (compressed, new_residual)
+  compressed_psum(x, axis)               — int8 quantize → psum → dequant
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+def _scale_of(x: jnp.ndarray) -> jnp.ndarray:
+    amax = jnp.max(jnp.abs(x))
+    return jnp.where(amax > 0, amax / _QMAX, 1.0)
+
+
+def _quantize_dequantize(x: jnp.ndarray) -> jnp.ndarray:
+    scale = _scale_of(x)
+    q = jnp.clip(jnp.round(x / scale), -_QMAX, _QMAX)
+    return q * scale
+
+
+def zero_residual(grads):
+    """Residual pytree of zeros matching ``grads``."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_with_error_feedback(grads, residual):
+    """Returns (compressed_grads, new_residual).
+
+    Per leaf: t = g + residual; compressed = Q(t); new_residual = t − Q(t)
+    — so compressed + new_residual == g + residual exactly, and over T
+    steps the mean compressed gradient converges to the true gradient.
+    """
+    totals = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    compressed = jax.tree_util.tree_map(_quantize_dequantize, totals)
+    new_residual = jax.tree_util.tree_map(
+        lambda t, c: t - c, totals, compressed)
+    return compressed, new_residual
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-quantized psum inside shard_map: agree on a global scale
+    (pmax of |x|), quantize locally to int8 codes, sum as int16 (the
+    accumulator stays overflow-safe up to 256 participants: 256·127 <
+    2¹⁵), dequantize.  The wire payload is the int16 code tensor + one
+    scalar — a 2× byte reduction on the cross-partition reduce vs fp32
+    (ring all-reduce sends partial sums, so the accumulator width is the
+    wire width; a gather-based int8 layout would reach 4×)."""
+    xf = x.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
+    scale = jnp.where(amax > 0, amax / _QMAX, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -_QMAX, _QMAX)
+    total = jax.lax.psum(q.astype(jnp.int16), axis_name)
+    return (total.astype(jnp.float32) * scale).astype(x.dtype)

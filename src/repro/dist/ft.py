@@ -1,0 +1,139 @@
+"""Fault-tolerant training driver: checkpoint-restart + straggler watch.
+
+``run`` wraps any ``step_fn(params, opt_state, batch, i)`` in a loop that
+- restores the latest intact checkpoint on entry (elastic restart),
+- checkpoints every ``ckpt_every`` steps (optionally on a background
+  thread) plus once at completion,
+- times every step and flags stragglers (step > factor × running median),
+- can inject a failure at a given step for restart testing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import threading
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .. import ckpt
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    resume: str = "auto"               # "auto" restores latest; "none" skips
+    async_checkpoint: bool = False     # save on a background thread
+    fail_at_step: int | None = None    # inject RuntimeError (tests)
+    straggler_factor: float = 0.0      # 0 disables detection
+    straggler_warmup: int = 2          # steps of timing history required
+
+
+@dataclasses.dataclass
+class FTState:
+    step: int = 0          # next step to execute (== total when done)
+    stragglers: int = 0
+    restarts: int = 0
+
+
+def _tree(params, opt_state):
+    return {"params": params, "opt": opt_state}
+
+
+class _Saver:
+    """Serialized (optionally async) checkpoint writes."""
+
+    def __init__(self, async_mode: bool):
+        self.async_mode = async_mode
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def _save(self, ckpt_dir: str, step: int, tree):
+        try:
+            ckpt.save(ckpt_dir, step, tree)
+        except BaseException as e:  # noqa: BLE001 — re-raised in wait()
+            self._error = e
+
+    def save(self, ckpt_dir: str, step: int, tree):
+        self.wait()
+        tree = jax.tree_util.tree_map(jnp.asarray, tree)
+        if self.async_mode:
+            self._thread = threading.Thread(
+                target=self._save, args=(ckpt_dir, step, tree), daemon=True)
+            self._thread.start()
+        else:
+            ckpt.save(ckpt_dir, step, tree)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
+
+
+def run(step_fn: Callable, params, opt_state, data_fn: Callable,
+        total_steps: int, cfg: FTConfig, *, log_every: int = 10,
+        log_fn: Callable = print, on_straggler: Callable | None = None):
+    """Drive ``total_steps`` of training with checkpoint-restart.
+
+    Returns (params, opt_state, losses, state); ``losses`` covers only the
+    steps executed in *this* invocation (a restart resumes mid-stream).
+    """
+    state = FTState()
+    start = 0
+    if cfg.resume == "auto":
+        try:
+            restored, step = ckpt.restore_latest(
+                cfg.ckpt_dir, _tree(params, opt_state))
+        except (AssertionError, KeyError) as e:
+            raise RuntimeError(
+                f"checkpoint in {cfg.ckpt_dir!r} does not match the current "
+                f"model (different arch/config?) — pass resume='none' or a "
+                f"fresh ckpt_dir to start over: {e}") from e
+        if step >= 0:
+            params, opt_state = restored["params"], restored["opt"]
+            start = step + 1
+            state.restarts = 1
+            if log_every:
+                log_fn(f"[ft] restored step {step}, resuming at {start}")
+    saver = _Saver(cfg.async_checkpoint)
+    losses: list[float] = []
+    durations: deque[float] = deque(maxlen=256)   # straggler baseline
+    last_saved = -1
+    for i in range(start, total_steps):
+        if cfg.fail_at_step is not None and i == cfg.fail_at_step:
+            saver.wait()
+            raise RuntimeError(f"injected failure at step {i}")
+        batch = data_fn(i)
+        t0 = time.perf_counter()
+        params, opt_state, loss = step_fn(params, opt_state, batch,
+                                          jnp.int32(i))
+        loss = jax.block_until_ready(loss)
+        dt = time.perf_counter() - t0
+        if (cfg.straggler_factor > 0
+                and len(durations) >= cfg.straggler_warmup):
+            median = statistics.median(durations)
+            if dt > cfg.straggler_factor * max(median, 1e-9):
+                state.stragglers += 1
+                if on_straggler is not None:
+                    on_straggler(i, dt, median)
+        durations.append(dt)
+        losses.append(float(loss))
+        state.step = i + 1
+        if log_every and i % log_every == 0:
+            log_fn(f"[ft] step {i} loss {float(loss):.4f} {dt*1e3:.1f}ms")
+        if cfg.ckpt_every and i > 0 and i % cfg.ckpt_every == 0:
+            saver.save(cfg.ckpt_dir, i, _tree(params, opt_state))
+            last_saved = i
+    if total_steps > start and last_saved != total_steps - 1:
+        saver.save(cfg.ckpt_dir, total_steps - 1,
+                   _tree(params, opt_state))
+    saver.wait()
+    state.step = max(state.step, start)
+    return params, opt_state, losses, state

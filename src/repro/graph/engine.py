@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .partition import PartitionLayout
+from ..dist._compat import shard_map
 
 DAMPING = 0.85
 
@@ -160,7 +161,7 @@ def shard_map_pagerank(layout: PartitionLayout, mesh: Mesh,
     num_vertices = layout.num_vertices
     spec = P(axis)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(spec, jax.tree_util.tree_map(lambda _: spec, dev)),
              out_specs=spec)
     def run(rank, dev):
@@ -192,7 +193,7 @@ def pagerank_step_for_dryrun(layout: PartitionLayout, mesh: Mesh,
     num_vertices = layout.num_vertices
     spec = P(axis)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(spec, jax.tree_util.tree_map(lambda _: spec, dev)),
              out_specs=spec)
     def step(rank, dev):

@@ -59,6 +59,14 @@ DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                "f8e5m2": 1, "s16": 2, "u16": 2}
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on new jax, [dict] on 0.4.x."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def collective_bytes(hlo_text: str) -> dict:
     out = {}
     for m in COLLECTIVE_RE.finditer(hlo_text):
@@ -207,7 +215,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
             compiled = lowered.compile()
             t2 = time.time()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         rec.update({
@@ -254,7 +262,7 @@ def _lower_probe(cfg, shape_name, mesh, rules, *, mp, block_kv, loss_chunk):
                                   loss_chunk=loss_chunk, unroll=True)
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

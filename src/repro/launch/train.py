@@ -36,7 +36,7 @@ def main():
     ap.add_argument("--d-model", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--resume", default="auto")
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -70,16 +70,24 @@ def main():
         b = batch_at(dcfg, step)
         return {k: jnp.asarray(v) for k, v in b.items()}
 
-    ft = FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    ft = FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                  resume=args.resume)
     t0 = time.time()
     params, opt_state, losses, state = ft_run(
         step_fn, params, opt_state, data_fn, args.steps, ft,
         log_every=args.log_every)
     dt = time.time() - t0
+    if not losses:
+        print(f"already complete at step {state.step} "
+              f"(restored checkpoint); nothing to do")
+        return
     print(f"done: {len(losses)} steps in {dt:.1f}s  "
           f"loss {losses[0]:.3f} → {losses[-1]:.3f}  "
           f"stragglers={state.stragglers}")
-    assert losses[-1] < losses[0], "loss did not improve"
+    if state.restarts == 0:
+        # a resumed tail can be a handful of near-converged steps whose
+        # loss noise defeats this check; only gate from-scratch runs
+        assert losses[-1] < losses[0], "loss did not improve"
 
 
 if __name__ == "__main__":

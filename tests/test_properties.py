@@ -1,6 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional dev dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (CLUGPConfig, clugp_partition, contract,
                         best_response_rounds, default_vmax, global_cost,
