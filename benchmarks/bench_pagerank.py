@@ -1,7 +1,12 @@
 """Fig. 8: performance on the real distributed system (PowerGraph →
-shard_map GAS engine).  Reports per-iteration communication volume
-(mirror-sync bytes — proportional to RF, the paper's mechanism) and local
-compute cost per partitioner, plus wall time of the simulated engine."""
+shard_map GAS engine).  Reports per-iteration communication volume for both
+exchange backends (dense padded all_gather vs mirror-routed halo
+all_to_all) next to the ragged ideal — the dense→halo byte reduction is the
+paper's mechanism (mirror count) showing up on the wire — plus local
+compute cost per partitioner and wall time of the simulated engine.
+
+``layout_build_bench`` times the vectorized ``build_layout`` against the
+retained reference builder (the PR-2 layout-build speedup)."""
 from __future__ import annotations
 
 import time
@@ -9,8 +14,9 @@ import time
 import numpy as np
 
 from repro.core import web_graph
-from repro.graph import build_layout, reference_pagerank, simulate_pagerank
-from .common import run_partitioner
+from repro.graph import (build_layout, build_layout_reference,
+                         reference_pagerank, simulate_pagerank)
+from .common import run_partitioner, stream_for
 
 
 def fig8_pagerank(scale=11, k=8, iters=20, seed=0):
@@ -19,24 +25,51 @@ def fig8_pagerank(scale=11, k=8, iters=20, seed=0):
     for algo in ("clugp-opt", "clugp", "hdrf", "hashing", "dbh"):
         out = run_partitioner(algo, g, k, seed)
         assign = out[0]
-        if algo.startswith("clugp"):
-            src, dst = g.src, g.dst
-        else:
-            src, dst = out[2]
+        src, dst = stream_for(algo, g, out)
         lay = build_layout(src, dst, assign, g.num_vertices, k)
-        t0 = time.time()
-        pr = simulate_pagerank(lay, iters=iters)
-        dt = time.time() - t0
         ref = reference_pagerank(src, dst, g.num_vertices, iters=iters)
-        err = float(np.abs(pr - ref).max())
-        rows.append({
+        row = {
             "bench": "fig8_pagerank", "algo": algo, "k": k,
             "comm_mb_per_iter": round(lay.comm_bytes_ideal() / 1e6, 4),
+            "comm_mb_dense_padded": round(
+                lay.comm_bytes_mirror_sync() / 1e6, 4),
+            "comm_mb_halo_padded": round(lay.comm_bytes_halo() / 1e6, 4),
             "comm_dense_mb": round(lay.comm_bytes_dense() / 1e6, 4),
             "local_edges_max": int(lay.e_max),
             "mirrors": int(lay.mirrors_total),
-            "engine_seconds": round(dt, 3),
-            "max_err": err,
-        })
-        assert err < 1e-5, (algo, err)
+        }
+        for exchange in ("dense", "halo"):
+            t0 = time.time()
+            pr = simulate_pagerank(lay, iters=iters, exchange=exchange)
+            dt = time.time() - t0
+            err = float(np.abs(pr - ref).max())
+            row[f"engine_seconds_{exchange}"] = round(dt, 3)
+            row[f"max_err_{exchange}"] = err
+            assert err < 1e-5, (algo, exchange, err)
+        rows.append(row)
     return rows
+
+
+def layout_build_bench(scale=12, k=8, seed=0, repeats=3):
+    """Vectorized vs reference ``build_layout`` wall time on a CLUGP
+    partition — the table the ≥5× layout-build speedup claim reads from."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    out = run_partitioner("clugp-opt", g, k, seed)
+    assign = out[0]
+    args = (g.src, g.dst, assign, g.num_vertices, k)
+    build_layout(*args)          # warm caches
+    t0 = time.time()
+    for _ in range(repeats):
+        lay = build_layout(*args)
+    vec_s = (time.time() - t0) / repeats
+    t0 = time.time()
+    ref_lay = build_layout_reference(*args)
+    ref_s = time.time() - t0
+    assert lay.mirrors_total == ref_lay.mirrors_total
+    return [{
+        "bench": "layout_build", "k": k, "scale": scale,
+        "num_vertices": g.num_vertices, "num_edges": g.num_edges,
+        "vectorized_s": round(vec_s, 4),
+        "reference_s": round(ref_s, 4),
+        "speedup": round(ref_s / max(vec_s, 1e-9), 2),
+    }]

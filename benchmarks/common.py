@@ -31,13 +31,22 @@ def run_partitioner(name: str, g, k: int, seed: int = 0,
     return a, dt, (gr.src, gr.dst)
 
 
-def quality_row(name, g, k, seed=0):
-    out = run_partitioner(name, g, k, seed)
-    assign, dt = out[0], out[1]
+def stream_for(name: str, g, out):
+    """The (src, dst) edge stream an assignment from ``run_partitioner``
+    indexes: CLUGP streams in crawl order (g.src/g.dst); baselines were
+    scored on their random re-stream, carried in out[2]."""
     if name.startswith("clugp"):
-        src, dst = g.src, g.dst
-    else:
-        src, dst = out[2]
+        return g.src, g.dst
+    return out[2]
+
+
+def quality_row(name, g, k, seed=0, out=None):
+    """Quality metrics for one partitioner run.  Pass ``out`` (a prior
+    ``run_partitioner`` result) to score it without re-partitioning."""
+    if out is None:
+        out = run_partitioner(name, g, k, seed)
+    assign, dt = out[0], out[1]
+    src, dst = stream_for(name, g, out)
     rf = metrics.replication_factor(src, dst, assign, g.num_vertices, k)
     bal = metrics.load_balance(assign, k)
     return {"algo": name, "k": k, "rf": round(rf, 4),

@@ -1,0 +1,181 @@
+"""Benchmark trend report: diff a fresh BENCH_*.json against the previous
+run's artifact and print a delta table (ROADMAP open item — CI uploads
+BENCH_*.json per PR; this script makes regressions visible in the job
+summary).
+
+    python benchmarks/trend.py --old prev_bench --new results [--summary]
+
+``--old`` / ``--new`` accept either a BENCH_*.json file or a directory to
+scan for one.  Rows are keyed by their non-numeric fields (bench, algo,
+exchange, …); numeric fields are diffed.  A missing previous artifact is
+not an error (first run on a branch): the script prints a note and exits 0.
+With ``--summary`` the markdown table is also appended to
+``$GITHUB_STEP_SUMMARY`` when that variable is set.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+# relative change below which a delta is noise, and above which a row is
+# flagged; wall-time rows jitter on shared CI runners, and error-magnitude
+# columns (max_err ~1e-8) jitter at float noise, so neither gets flagged
+REL_EPS = 0.02
+FLAG_REL = 0.25
+NOISE_HINTS = ("seconds", "_s", "us_per", "runtime", "err")
+FLAG_ABS_FLOOR = 1e-6
+# fields where bigger is better — flag polarity inverts (drop → ⚠)
+GOOD_UP_HINTS = ("speedup",)
+# numeric fields that identify a row rather than measure it — part of the
+# match key, never diffed (fig3/fig7 emit one row per k with identical
+# string fields, so k etc. must disambiguate)
+IDENTITY_FIELDS = ("k", "scale", "iters", "seed", "shards", "E", "K",
+                   "n_nodes", "exchange")
+
+
+def find_bench(path: str) -> Path | None:
+    p = Path(path)
+    if p.is_file():
+        return p
+    if p.is_dir():
+        cands = sorted(p.rglob("BENCH_*.json"),
+                       key=lambda f: f.stat().st_mtime)
+        if cands:
+            return cands[-1]
+        legacy = p / "bench.json"
+        if legacy.exists():
+            return legacy
+    return None
+
+
+def row_key(row: dict) -> tuple:
+    return tuple(sorted((k, v) for k, v in row.items()
+                        if k in IDENTITY_FIELDS
+                        or not isinstance(v, (int, float))
+                        or isinstance(v, bool)))
+
+
+def numeric_fields(row: dict) -> dict:
+    return {k: v for k, v in row.items()
+            if k not in IDENTITY_FIELDS
+            and isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def is_noise_field(name: str) -> bool:
+    return any(h in name for h in NOISE_HINTS)
+
+
+def row_label(row: dict) -> str:
+    return " ".join(f"{k}={v}" if k in IDENTITY_FIELDS else str(v)
+                    for k, v in
+                    sorted((k, v) for k, v in row.items()
+                           if isinstance(v, (str, bool))
+                           or k in IDENTITY_FIELDS))
+
+
+def diff_rows(old_rows: list[dict], new_rows: list[dict]) -> list[dict]:
+    old_by_key = {row_key(r): r for r in old_rows}
+    new_keys = {row_key(r) for r in new_rows}
+    out = []
+    for key, prev in old_by_key.items():
+        if key not in new_keys:   # coverage shrank — say so
+            out.append({"label": row_label(prev) or str(key),
+                        "field": "(removed row)", "old": None,
+                        "new": None, "rel": None, "flag": "gone"})
+    for row in new_rows:
+        key = row_key(row)
+        prev = old_by_key.get(key)
+        label = row_label(row)
+        if prev is None:
+            out.append({"label": label or str(key), "field": "(new row)",
+                        "old": None, "new": None, "rel": None,
+                        "flag": "new"})
+            continue
+        for field, new_v in numeric_fields(row).items():
+            if is_noise_field(field):
+                # timing / float-error columns jitter on shared runners
+                # (+15%..+476% observed run-to-run) and would bury every
+                # substantive delta; they stay in the artifacts only
+                continue
+            old_v = prev.get(field)
+            if not isinstance(old_v, (int, float)) \
+                    or isinstance(old_v, bool):
+                continue
+            denom = max(abs(old_v), 1e-12)
+            rel = (new_v - old_v) / denom
+            if abs(rel) < REL_EPS:
+                continue
+            flag = ""
+            if abs(rel) >= FLAG_REL \
+                    and max(abs(old_v), abs(new_v)) >= FLAG_ABS_FLOOR:
+                worse = rel < 0 if any(h in field for h in GOOD_UP_HINTS) \
+                    else rel > 0
+                flag = "⚠" if worse else "✓"
+            out.append({"label": label or str(key), "field": field,
+                        "old": old_v, "new": new_v, "rel": rel,
+                        "flag": flag})
+    return out
+
+
+def fmt_table(deltas: list[dict], old_name: str, new_name: str) -> str:
+    lines = [f"### Benchmark trend: `{new_name}` vs `{old_name}`", ""]
+    if not deltas:
+        lines.append("No numeric field moved by more than "
+                     f"{REL_EPS:.0%} — benchmarks are flat.")
+        return "\n".join(lines)
+    lines += ["| row | field | old | new | Δ | |",
+              "|---|---|---:|---:|---:|---|"]
+    for d in deltas:
+        if d["field"] in ("(new row)", "(removed row)"):
+            lines.append(f"| {d['label']} | *{d['field']}* | — | — | — | |")
+            continue
+        lines.append(
+            f"| {d['label']} | {d['field']} | {d['old']:g} | "
+            f"{d['new']:g} | {d['rel']:+.1%} | {d['flag']} |")
+    lines += ["", f"(noise gate {REL_EPS:.0%}; ⚠/✓ flags moves ≥ "
+                  f"{FLAG_REL:.0%}; timing/error columns omitted — see "
+                  f"the artifacts)"]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--old", required=True,
+                    help="previous BENCH_*.json (file or dir to scan)")
+    ap.add_argument("--new", required=True,
+                    help="fresh BENCH_*.json (file or dir to scan)")
+    ap.add_argument("--summary", action="store_true",
+                    help="also append to $GITHUB_STEP_SUMMARY if set")
+    args = ap.parse_args()
+
+    new_f = find_bench(args.new)
+    if new_f is None:
+        print(f"trend: no BENCH_*.json under {args.new}", file=sys.stderr)
+        return 1
+    old_f = find_bench(args.old)
+    if old_f is None:
+        txt = (f"### Benchmark trend\n\nno previous artifact under "
+               f"`{args.old}` — nothing to diff (first run?)")
+    else:
+        try:
+            deltas = diff_rows(json.loads(old_f.read_text()),
+                               json.loads(new_f.read_text()))
+            txt = fmt_table(deltas, old_f.name, new_f.name)
+        except (json.JSONDecodeError, TypeError, AttributeError) as e:
+            # a corrupt / partially-downloaded artifact must not fail the
+            # job (the fresh artifact still needs to upload as baseline)
+            txt = (f"### Benchmark trend\n\ncould not diff against "
+                   f"`{old_f}`: {type(e).__name__}: {e}")
+    print(txt)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if args.summary and summary:
+        with open(summary, "a") as fh:
+            fh.write(txt + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,12 +22,15 @@ gr = random_stream(g, seed=1)
 h = baselines.hashing(gr.src, gr.dst, g.num_vertices, K)
 lay_hash = build_layout(gr.src, gr.dst, h, g.num_vertices, K)
 
-print(f"{'partitioner':10s} {'mirrors':>9s} {'comm MB/iter':>13s}")
+print(f"{'partitioner':10s} {'mirrors':>9s} {'ideal MB/it':>12s} "
+      f"{'halo MB/it':>11s} {'dense MB/it':>12s}")
 for name, lay in (("clugp", lay_clugp), ("hashing", lay_hash)):
     print(f"{name:10s} {lay.mirrors_total:>9d} "
-          f"{lay.comm_bytes_ideal()/1e6:>13.3f}")
+          f"{lay.comm_bytes_ideal()/1e6:>12.3f} "
+          f"{lay.comm_bytes_halo()/1e6:>11.3f} "
+          f"{lay.comm_bytes_mirror_sync()/1e6:>12.3f}")
 
-pr = simulate_pagerank(lay_clugp, iters=30)
+pr = simulate_pagerank(lay_clugp, iters=30, exchange="halo")
 ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
 print(f"pagerank: max|err|={np.abs(pr-ref).max():.2e} (30 iters)")
 

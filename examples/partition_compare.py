@@ -1,16 +1,30 @@
-"""Compare all partitioners across k — a minified Fig. 3/7.
+"""Compare all partitioners across k — a minified Fig. 3/7, plus the
+per-iteration GAS wire cost each partition would pay on the engine's two
+exchange backends (dense padded all_gather vs mirror-routed halo
+all_to_all) next to the ragged ideal.
 
-    PYTHONPATH=src python examples/partition_compare.py
+    PYTHONPATH=src:. python examples/partition_compare.py
 """
-from benchmarks.common import quality_row
+import numpy as np
+
+from benchmarks.common import quality_row, run_partitioner, stream_for
 from repro.core import web_graph
+from repro.graph import build_layout
 
 g = web_graph(scale=12, edge_factor=8, seed=0)
 print(f"web graph: |V|={g.num_vertices} |E|={g.num_edges}")
-print(f"{'algo':12s} {'k':>4s} {'RF':>8s} {'balance':>8s} {'µs/edge':>9s}")
+print(f"{'algo':12s} {'k':>4s} {'RF':>8s} {'balance':>8s} {'µs/edge':>9s} "
+      f"{'dense kB/it':>12s} {'halo kB/it':>11s} {'ideal kB/it':>12s}")
 for k in (4, 16, 64):
     for algo in ("clugp", "clugp-opt", "hashing", "dbh", "greedy", "hdrf",
                  "mint"):
-        r = quality_row(algo, g, k)
+        out = run_partitioner(algo, g, k, 0)
+        r = quality_row(algo, g, k, out=out)
+        src, dst = stream_for(algo, g, out)
+        lay = build_layout(np.asarray(src), np.asarray(dst), out[0],
+                           g.num_vertices, k)
         print(f"{r['algo']:12s} {r['k']:>4d} {r['rf']:>8.3f} "
-              f"{r['balance']:>8.3f} {r['us_per_edge']:>9.2f}")
+              f"{r['balance']:>8.3f} {r['us_per_edge']:>9.2f} "
+              f"{lay.comm_bytes_mirror_sync()/1e3:>12.1f} "
+              f"{lay.comm_bytes_halo()/1e3:>11.1f} "
+              f"{lay.comm_bytes_ideal()/1e3:>12.1f}")

@@ -104,6 +104,10 @@ def clugp_partition_parallel(src: np.ndarray, dst: np.ndarray,
     """Distributed mode (§III-C): split the stream, run the three passes per
     node on its slice, concatenate the edge assignments."""
     E = src.shape[0]
+    if E == 0:
+        raise ValueError(
+            "clugp_partition_parallel: the edge stream is empty (0 edges); "
+            "there is nothing to partition")
     bounds = np.linspace(0, E, n_nodes + 1).astype(np.int64)
     assign = np.zeros(E, dtype=np.int32)
     rounds = 0

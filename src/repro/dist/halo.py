@@ -1,0 +1,179 @@
+"""Exchange abstraction for the vertex-cut GAS engine's mirror sync.
+
+The engine's per-iteration communication is two phases over the mirror
+replicas (paper §II-B): mirror partials reduce to masters (gather), master
+values broadcast back to mirrors (scatter).  This module gives the engine a
+pluggable wire format for those phases:
+
+- ``DenseExchange`` — the seed path: ``all_gather`` the full padded
+  (L_max,) slab from every device and index into it with the static
+  ``red_index`` / ``(owner, own_slot)`` tables.  Bytes ∝ k²·L_max per
+  phase, independent of partition quality.
+- ``HaloExchange`` — mirror-routed: each device packs only its mirror
+  slots into per-destination lanes (``halo_send``) and a single
+  ``all_to_all`` delivers every lane to its owner, which scatters via
+  ``halo_recv``.  Bytes ∝ k·(k−1)·H_max per phase — within per-pair
+  padding of the ideal 2·mirrors volume, so CLUGP's mirror reduction is
+  the engine's real wire cost.
+
+Each backend exposes the same four operations:
+
+  reduce_to_masters(partial, dev, combine)    per-device, inside shard_map
+  broadcast_from_masters(new_master, dev)     per-device, inside shard_map
+  reduce_stacked(partials, dev, combine)      stacked (k, L_max) one-device
+  broadcast_stacked(masters, dev)             stacked (k, L_max) one-device
+
+``dev`` is the layout's ``device_arrays()`` pytree — per-device slices in
+the shard_map forms, full (k, …) stacks in the stacked forms.  ``combine``
+is ``"sum"`` (pagerank) or ``"min"`` (label propagation).  The stacked
+forms model the collective with a transpose (all_to_all) / broadcast
+(all_gather), so tests and host benchmarks run the identical math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# identity element fed into padded send lanes; recv pads are dropped by the
+# segment reduce regardless, so this only has to be shape-safe
+_PAD_VALUE = {"sum": 0.0, "min": 3e38}
+
+
+def _segment_combine(vals, segments, num_segments: int, combine: str):
+    if combine == "sum":
+        return jax.ops.segment_sum(vals, segments,
+                                   num_segments=num_segments)
+    return jax.ops.segment_min(vals, segments, num_segments=num_segments)
+
+
+def _merge(local, received, combine: str):
+    if combine == "sum":
+        return local + received
+    return jnp.minimum(local, received)
+
+
+@dataclass(frozen=True)
+class DenseExchange:
+    """Padded all_gather mirror sync (the seed wire format)."""
+    axis: str | None = None
+    name = "dense"
+
+    # -- per-device halves (inside shard_map over ``axis``) --
+    def reduce_to_masters(self, partial, dev, combine: str = "sum"):
+        g = jax.lax.all_gather(partial, self.axis)          # (k, L_max)
+        return self._reduce_flat(g.reshape(-1), dev, combine)
+
+    def broadcast_from_masters(self, new_master, dev):
+        g = jax.lax.all_gather(new_master, self.axis)       # (k, L_max)
+        return g[dev["owner"], dev["own_slot"]]
+
+    # -- stacked halves ((k, L_max) arrays on one device) --
+    def reduce_stacked(self, partials, dev, combine: str = "sum"):
+        flat = partials.reshape(-1)
+        return jax.vmap(
+            lambda d: self._reduce_flat(flat, d, combine))(dev)
+
+    def broadcast_stacked(self, masters, dev):
+        return jax.vmap(lambda d: masters[d["owner"], d["own_slot"]])(dev)
+
+    @staticmethod
+    def _reduce_flat(flat_gathered, dev, combine: str):
+        l_max = dev["vert_gid"].shape[0]
+        return _segment_combine(flat_gathered, dev["red_index"],
+                                l_max + 1, combine)[:l_max]
+
+    def bytes_per_iter(self, layout, value_bytes: int = 4) -> int:
+        return layout.comm_bytes_mirror_sync(value_bytes)
+
+
+@dataclass(frozen=True)
+class HaloExchange:
+    """Mirror-routed all_to_all sync over the layout's halo tables.
+
+    Reduce: pack mirror values into (k, H_max) destination lanes, one
+    all_to_all, scatter-combine received lanes into master slots, merge
+    with the local partial (a master's own contribution never leaves the
+    device).  Broadcast runs the same route backwards: masters pack
+    ``halo_recv`` lanes, mirrors scatter via ``halo_send``; master slots
+    keep their local value.
+    """
+    axis: str | None = None
+    name = "halo"
+
+    # -- per-device halves (inside shard_map over ``axis``) --
+    def reduce_to_masters(self, partial, dev, combine: str = "sum"):
+        l_max = partial.shape[0]
+        send = self._pack(partial, dev["halo_send"], combine)
+        recv = jax.lax.all_to_all(send, self.axis, 0, 0)    # (k, H_max)
+        agg = _segment_combine(recv.reshape(-1),
+                               dev["halo_recv"].reshape(-1),
+                               l_max + 1, combine)[:l_max]
+        return _merge(partial, agg, combine)
+
+    def broadcast_from_masters(self, new_master, dev):
+        l_max = new_master.shape[0]
+        send = self._pack(new_master, dev["halo_recv"], "sum")
+        recv = jax.lax.all_to_all(send, self.axis, 0, 0)    # (k, H_max)
+        return self._unpack(new_master, recv, dev)
+
+    # -- stacked halves: all_to_all over k virtual devices == transpose --
+    def reduce_stacked(self, partials, dev, combine: str = "sum"):
+        l_max = partials.shape[1]
+        send = jax.vmap(
+            lambda v, idx: self._pack(v, idx, combine)
+        )(partials, dev["halo_send"])                       # (k, k, H_max)
+        recv = jnp.swapaxes(send, 0, 1)
+
+        def one(recv_q, slots_q, partial_q):
+            agg = _segment_combine(recv_q.reshape(-1),
+                                   slots_q.reshape(-1),
+                                   l_max + 1, combine)[:l_max]
+            return _merge(partial_q, agg, combine)
+
+        return jax.vmap(one)(recv, dev["halo_recv"], partials)
+
+    def broadcast_stacked(self, masters, dev):
+        send = jax.vmap(
+            lambda v, idx: self._pack(v, idx, "sum")
+        )(masters, dev["halo_recv"])                        # (k, k, H_max)
+        recv = jnp.swapaxes(send, 0, 1)
+        return jax.vmap(
+            lambda m, r, d: self._unpack(m, r, d)
+        )(masters, recv, dev)
+
+    @staticmethod
+    def _pack(values, lanes, combine: str):
+        """values (L_max,) → (k, H_max) send lanes; pad lanes read the
+        combine identity appended at index L_max."""
+        pad = jnp.full((1,), _PAD_VALUE[combine], values.dtype)
+        return jnp.concatenate([values, pad])[lanes]
+
+    @staticmethod
+    def _unpack(new_master, recv, dev):
+        """Scatter received master values into this device's mirror slots
+        (each valid lane targets a distinct slot; pads land in the dropped
+        L_max bucket); master slots keep their local value."""
+        l_max = new_master.shape[0]
+        scattered = jnp.zeros((l_max + 1,), new_master.dtype).at[
+            dev["halo_send"].reshape(-1)].set(recv.reshape(-1))[:l_max]
+        return jnp.where(dev["is_master"], new_master, scattered)
+
+    def bytes_per_iter(self, layout, value_bytes: int = 4) -> int:
+        return layout.comm_bytes_halo(value_bytes)
+
+
+EXCHANGES = {"dense": DenseExchange, "halo": HaloExchange}
+
+
+def get_exchange(name: str, axis: str | None = None):
+    """Exchange factory: ``name`` ∈ {"dense", "halo"}; ``axis`` is the mesh
+    axis for the shard_map halves (stacked halves ignore it)."""
+    try:
+        cls = EXCHANGES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown exchange {name!r}; expected one of "
+            f"{sorted(EXCHANGES)}") from None
+    return cls(axis=axis)

@@ -1,5 +1,6 @@
 """Distributed vertex-cut graph engine (the paper's PowerGraph deployment)."""
-from .partition import PartitionLayout, build_layout  # noqa: F401
+from .partition import (PartitionLayout, build_layout,  # noqa: F401
+                        build_layout_reference)
 from .engine import (simulate_pagerank, simulate_cc, shard_map_pagerank,  # noqa: F401
                      pagerank_step_for_dryrun, reference_pagerank,
                      reference_cc)

@@ -2,11 +2,17 @@
 
 Per iteration (paper §II-B): local scatter/gather over the partition's edges
 (segment_sum — the ``csr_spmv`` Pallas kernel's op), mirror partials reduced
-to masters (all_gather #1 + static ``red_index`` segment reduce), masters
-apply, new values broadcast back to mirrors (all_gather #2 + static
-``(owner, own_slot)`` gather).  Communication per iteration is two
-all_gathers of (k, L_max) values — ∝ replication factor, the quantity the
-partitioner optimizes (Fig. 8's mechanism, in bytes).
+to masters, masters apply, new values broadcast back to mirrors.  The two
+mirror-sync phases go through the pluggable exchange layer
+(``repro.dist.halo``):
+
+- ``exchange="dense"``: two all_gathers of (k, L_max) values — simple, but
+  bytes scale with k²·L_max regardless of partition quality (the seed wire
+  format).
+- ``exchange="halo"``: two all_to_alls over the layout's static mirror
+  routing tables — bytes scale with the mirror count (RF−1)·|V|, the
+  quantity the partitioner optimizes, so Fig. 8's mechanism shows up on
+  the wire.
 
 Two drivers around the same per-device halves:
 
@@ -27,6 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .partition import PartitionLayout
 from ..dist._compat import shard_map
+from ..dist.halo import get_exchange
 
 DAMPING = 0.85
 
@@ -49,20 +56,6 @@ def _local_dangle(rank, dev):
     """Rank mass sitting on dangling masters (out_deg == 0)."""
     m = dev["vert_mask"] & dev["is_master"] & (dev["out_deg"] == 0)
     return jnp.sum(jnp.where(m, rank, 0.0))
-
-
-def _reduce_to_master(flat_gathered, dev, combine="sum"):
-    l_max = dev["vert_gid"].shape[0]
-    if combine == "sum":
-        return jax.ops.segment_sum(flat_gathered, dev["red_index"],
-                                   num_segments=l_max + 1)[:l_max]
-    return jax.ops.segment_min(flat_gathered, dev["red_index"],
-                               num_segments=l_max + 1)[:l_max]
-
-
-def _broadcast_from_master(gathered, dev):
-    """gathered: (k, L_max) master values; pick (owner, own_slot)."""
-    return gathered[dev["owner"], dev["own_slot"]]
 
 
 def _pagerank_apply(total_in, dangle, dev, num_vertices):
@@ -88,42 +81,41 @@ def _cc_local_min(label, dev):
 
 # ----------------------------------------------------------- simulated driver
 
-def _stack_dev(layout: PartitionLayout):
-    return jax.tree_util.tree_map(jnp.asarray, layout.device_arrays())
+def _stack_dev(layout: PartitionLayout, exchange: str | None = None):
+    return jax.tree_util.tree_map(jnp.asarray,
+                                  layout.device_arrays(exchange))
 
 
-@partial(jax.jit, static_argnames=("iters", "num_vertices"))
-def _sim_pagerank(dev, iters: int, num_vertices: int):
-    k, l_max = dev["vert_gid"].shape
+@partial(jax.jit, static_argnames=("iters", "num_vertices", "exchange"))
+def _sim_pagerank(dev, iters: int, num_vertices: int, exchange: str):
+    ex = get_exchange(exchange)
     rank = jnp.where(dev["vert_mask"], 1.0 / num_vertices, 0.0)
 
     def body(_, rank):
         partial_ = jax.vmap(_local_rank_partial)(rank, dev)
-        flat = partial_.reshape(-1)
-        total = jax.vmap(lambda d: _reduce_to_master(flat, d))(
-            jax.tree_util.tree_map(lambda x: x, dev))
+        total = ex.reduce_stacked(partial_, dev)
         dangle = jnp.sum(jax.vmap(_local_dangle)(rank, dev))
         new_master = jax.vmap(
             lambda t, d: _pagerank_apply(t, dangle, d, num_vertices)
         )(total, dev)
-        return jax.vmap(lambda d: _broadcast_from_master(new_master, d))(dev)
+        return ex.broadcast_stacked(new_master, dev)
 
     return jax.lax.fori_loop(0, iters, body, rank)
 
 
-@partial(jax.jit, static_argnames=("iters",))
-def _sim_cc(dev, iters: int):
+@partial(jax.jit, static_argnames=("iters", "exchange"))
+def _sim_cc(dev, iters: int, exchange: str):
+    ex = get_exchange(exchange)
     label = jnp.where(dev["vert_mask"], dev["vert_gid"].astype(jnp.float32),
                       jnp.float32(np.inf))
 
     def body(_, label):
         part = jax.vmap(_cc_local_min)(label, dev)
-        flat = part.reshape(-1)
-        flat = jnp.where(jnp.isfinite(flat), flat, jnp.float32(3e38))
-        total = jax.vmap(lambda d: _reduce_to_master(flat, d, "min"))(dev)
+        part = jnp.where(jnp.isfinite(part), part, jnp.float32(3e38))
+        total = ex.reduce_stacked(part, dev, "min")
         new_master = jnp.where(dev["vert_mask"] & dev["is_master"], total,
                                jnp.float32(3e38))
-        return jax.vmap(lambda d: _broadcast_from_master(new_master, d))(dev)
+        return ex.broadcast_stacked(new_master, dev)
 
     return jax.lax.fori_loop(0, iters, body, label)
 
@@ -138,27 +130,42 @@ def _collect_master_values(layout: PartitionLayout, stacked) -> np.ndarray:
     return out
 
 
-def simulate_pagerank(layout: PartitionLayout, iters: int = 30) -> np.ndarray:
-    dev = _stack_dev(layout)
-    ranks = _sim_pagerank(dev, iters, layout.num_vertices)
+def simulate_pagerank(layout: PartitionLayout, iters: int = 30,
+                      exchange: str = "dense") -> np.ndarray:
+    dev = _stack_dev(layout, exchange)
+    ranks = _sim_pagerank(dev, iters, layout.num_vertices, exchange)
     return _collect_master_values(layout, ranks)
 
 
-def simulate_cc(layout: PartitionLayout, iters: int = 30) -> np.ndarray:
-    dev = _stack_dev(layout)
-    labels = _sim_cc(dev, iters)
+def simulate_cc(layout: PartitionLayout, iters: int = 30,
+                exchange: str = "dense") -> np.ndarray:
+    dev = _stack_dev(layout, exchange)
+    labels = _sim_cc(dev, iters, exchange)
     return _collect_master_values(layout, labels).astype(np.int64)
 
 
 # ----------------------------------------------------------- shard_map driver
 
+def _pagerank_body(ex, dev, num_vertices, axis):
+    """One GAS iteration as run on each device (inside shard_map)."""
+    def body(_, rank):
+        partial_ = _local_rank_partial(rank, dev)
+        total = ex.reduce_to_masters(partial_, dev)
+        dangle = jax.lax.psum(_local_dangle(rank, dev), axis)
+        new_master = _pagerank_apply(total, dangle, dev, num_vertices)
+        return ex.broadcast_from_masters(new_master, dev)
+    return body
+
+
 def shard_map_pagerank(layout: PartitionLayout, mesh: Mesh,
-                       iters: int = 30, axis: str = "parts"):
+                       iters: int = 30, axis: str = "parts",
+                       exchange: str = "dense"):
     """Production path: one partition per device along ``axis``.
-    Requires mesh axis size == layout.k.  Returns (V,) master ranks plus the
-    lowered/compiled step for inspection (dry-run hooks read its HLO)."""
-    dev = _stack_dev(layout)
+    Requires mesh axis size == layout.k.  ``exchange`` picks the mirror
+    wire format (see module docstring).  Returns (V,) master ranks."""
+    dev = _stack_dev(layout, exchange)
     num_vertices = layout.num_vertices
+    ex = get_exchange(exchange, axis)
     spec = P(axis)
 
     @partial(shard_map, mesh=mesh,
@@ -167,16 +174,7 @@ def shard_map_pagerank(layout: PartitionLayout, mesh: Mesh,
     def run(rank, dev):
         rank = rank[0]
         dev = jax.tree_util.tree_map(lambda x: x[0], dev)
-
-        def body(_, rank):
-            partial_ = _local_rank_partial(rank, dev)
-            g = jax.lax.all_gather(partial_, axis)          # (k, L_max)
-            total = _reduce_to_master(g.reshape(-1), dev)
-            dangle = jax.lax.psum(_local_dangle(rank, dev), axis)
-            new_master = _pagerank_apply(total, dangle, dev, num_vertices)
-            g2 = jax.lax.all_gather(new_master, axis)       # (k, L_max)
-            return _broadcast_from_master(g2, dev)
-
+        body = _pagerank_body(ex, dev, num_vertices, axis)
         out = jax.lax.fori_loop(0, iters, body, rank)
         return out[None]
 
@@ -187,10 +185,14 @@ def shard_map_pagerank(layout: PartitionLayout, mesh: Mesh,
 
 
 def pagerank_step_for_dryrun(layout: PartitionLayout, mesh: Mesh,
-                             axis: str = "parts", iters: int = 1):
-    """Returns (jitted_fn, example_args) whose .lower() the dry-run compiles."""
-    dev = _stack_dev(layout)
+                             axis: str = "parts", iters: int = 1,
+                             exchange: str = "dense"):
+    """Returns (jitted_fn, example_args) whose .lower() the dry-run compiles
+    — the graph dry-run parses each backend's collective bytes out of the
+    post-SPMD HLO (``launch/dryrun.py --graph``)."""
+    dev = _stack_dev(layout, exchange)
     num_vertices = layout.num_vertices
+    ex = get_exchange(exchange, axis)
     spec = P(axis)
 
     @partial(shard_map, mesh=mesh,
@@ -199,16 +201,7 @@ def pagerank_step_for_dryrun(layout: PartitionLayout, mesh: Mesh,
     def step(rank, dev):
         rank = rank[0]
         dev = jax.tree_util.tree_map(lambda x: x[0], dev)
-
-        def body(_, rank):
-            partial_ = _local_rank_partial(rank, dev)
-            g = jax.lax.all_gather(partial_, axis)
-            total = _reduce_to_master(g.reshape(-1), dev)
-            dangle = jax.lax.psum(_local_dangle(rank, dev), axis)
-            new_master = _pagerank_apply(total, dangle, dev, num_vertices)
-            g2 = jax.lax.all_gather(new_master, axis)
-            return _broadcast_from_master(g2, dev)
-
+        body = _pagerank_body(ex, dev, num_vertices, axis)
         return jax.lax.fori_loop(0, iters, body, rank)[None]
 
     rank0 = jnp.where(dev["vert_mask"], 1.0 / num_vertices, 0.0)

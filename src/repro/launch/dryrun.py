@@ -51,9 +51,9 @@ PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # B/s / chip
 ICI_BW = 50e9                # B/s / link
 
-COLLECTIVE_RE = re.compile(
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"[^=]*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
                "f8e5m2": 1, "s16": 2, "u16": 2}
@@ -68,14 +68,36 @@ def cost_dict(compiled) -> dict:
 
 
 def collective_bytes(hlo_text: str) -> dict:
+    """Per-device output bytes of every collective instruction, by kind.
+
+    Anchored on the instruction name left of ``=`` and summing every
+    ``dtype[dims]`` in the output type — which may be a tuple:  XLA:CPU
+    lowers ``all_to_all`` to ``(f32[1,H], …×k) all-to-all(…)``.  Async
+    ``-done`` halves are skipped (their output repeats the start's)."""
     out = {}
-    for m in COLLECTIVE_RE.finditer(hlo_text):
-        kind, dt, dims = m.group(1), m.group(2), m.group(3)
-        size = 1
-        for d in dims.split(","):
-            if d:
-                size *= int(d)
-        b = size * DTYPE_BYTES.get(dt, 4)
+    for line in hlo_text.splitlines():
+        head, sep, rest = line.partition("=")
+        if not sep:
+            continue
+        name = head.strip().removeprefix("ROOT").strip().lstrip("%")
+        kind = next((kd for kd in COLLECTIVE_KINDS
+                     if name.startswith(kd)), None)
+        if kind is None or "-done" in name:
+            continue
+        idx = rest.find(kind)
+        out_type = rest[:idx] if idx >= 0 else rest
+        shapes = SHAPE_RE.findall(out_type)
+        if "-start" in name and len(shapes) > 1:
+            # async start tuples are (aliased operand, result, …): the
+            # first element is the input, not wire traffic
+            shapes = shapes[1:]
+        b = 0
+        for dt, dims in shapes:
+            size = 1
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            b += size * DTYPE_BYTES.get(dt, 4)
         out[kind] = out.get(kind, 0) + b
     out["total"] = sum(v for k, v in out.items() if k != "total")
     return out
@@ -115,7 +137,8 @@ def cfg_with_counts(cfg, counts: dict):
 
 def build_cell(cfg, shape_name: str, mesh, rules, *, mp: int,
                multi_pod: bool, block_kv: int = 1024, loss_chunk: int = 512,
-               zero: bool | None = None, unroll: bool = False):
+               zero: bool | None = None, unroll: bool = False,
+               compress: bool = False):
     """Returns (jitted_fn, example_args_shapes) for lowering."""
     kind = SHAPES[shape_name]["kind"]
     if kind == "train":
@@ -142,8 +165,13 @@ def build_cell(cfg, shape_name: str, mesh, rules, *, mp: int,
         o_shardings = _shardings(o_specs, opt_sds, mesh)
         b_specs = batch_specs(specs["batch"], multi_pod=multi_pod)
         b_shardings = _shardings(b_specs, specs["batch"], mesh)
+        compress_fn = None
+        if compress:
+            from repro.dist.compress import make_grad_compressor
+            compress_fn = make_grad_compressor()
         step_fn = make_train_step(cfg, opt, mp=mp, block_kv=block_kv,
-                                  loss_chunk=loss_chunk, unroll=unroll)
+                                  loss_chunk=loss_chunk, unroll=unroll,
+                                  compress_grads=compress_fn)
         jitted = jax.jit(
             step_fn,
             in_shardings=(p_shardings, o_shardings, b_shardings, None),
@@ -185,10 +213,12 @@ def build_cell(cfg, shape_name: str, mesh, rules, *, mp: int,
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
              block_kv: int = 1024, loss_chunk: int = 512, tag: str = "",
-             mp_override: int | None = None, rules_name: str = "tp") -> dict:
+             mp_override: int | None = None, rules_name: str = "tp",
+             compress: bool = False) -> dict:
     cfg = get_config(arch)
+    compress = compress and SHAPES[shape_name]["kind"] == "train"
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
-           "tag": tag or "baseline"}
+           "tag": tag or "baseline", "compress_grads": compress}
     skip = cell_is_skipped(cfg, shape_name)
     if skip:
         rec["status"] = skip
@@ -209,15 +239,31 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
             jitted, args = build_cell(cfg, shape_name, mesh, rules, mp=mp,
                                       multi_pod=multi_pod,
                                       block_kv=block_kv,
-                                      loss_chunk=loss_chunk)
+                                      loss_chunk=loss_chunk,
+                                      compress=compress)
             lowered = jitted.lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
             t2 = time.time()
+            if compress:
+                # surface the collective-byte delta vs the uncompressed
+                # step (ROADMAP open item): compile the baseline too
+                base_jit, base_args = build_cell(
+                    cfg, shape_name, mesh, rules, mp=mp,
+                    multi_pod=multi_pod, block_kv=block_kv,
+                    loss_chunk=loss_chunk, compress=False)
+                base_coll = collective_bytes(
+                    base_jit.lower(*base_args).compile().as_text())
         mem = compiled.memory_analysis()
         cost = cost_dict(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
+        if compress:
+            rec["collective_bytes_uncompressed"] = base_coll
+            rec["collective_delta_bytes"] = base_coll["total"] - coll["total"]
+            print(f"  compress-grads delta: {base_coll['total']:.3e}B → "
+                  f"{coll['total']:.3e}B "
+                  f"({rec['collective_delta_bytes']:+.3e}B)")
         rec.update({
             "status": "ok",
             "lower_s": round(t1 - t0, 1),
@@ -250,6 +296,85 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
         f"{('__' + tag) if tag else ''}.json"
     fname.write_text(json.dumps(rec, indent=1))
     return rec
+
+
+def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
+                   iters: int = 1, tag: str = "") -> list[dict]:
+    """GAS-engine dry-run: lower one pagerank step per exchange backend on
+    a k-device mesh and parse the measured collective bytes out of the
+    post-SPMD HLO, next to the layout's modelled volumes — the dense→halo
+    byte reduction in one JSON record per backend.
+
+    HLO bytes are per-device; ×k (minus the all_to_all self lane, which
+    never crosses the wire) gives the fleet wire volume comparable to
+    ``comm_bytes_mirror_sync`` / ``comm_bytes_halo`` / ``comm_bytes_ideal``.
+    """
+    from repro.core import CLUGPConfig, clugp_partition, web_graph
+    from repro.graph import build_layout, pagerank_step_for_dryrun
+    from repro.launch.mesh import make_graph_mesh
+
+    g = web_graph(scale=scale, edge_factor=8, seed=0)
+    res = clugp_partition(g.src, g.dst, g.num_vertices,
+                          CLUGPConfig.optimized(k))
+    lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
+    mesh = make_graph_mesh(k)
+    recs = []
+    for exchange in ("dense", "halo"):
+        rec = {"bench": "graph_pagerank_step", "exchange": exchange,
+               "k": k, "scale": scale, "iters": iters,
+               "num_vertices": g.num_vertices, "num_edges": g.num_edges,
+               "l_max": lay.l_max, "h_max": lay.h_max,
+               "mirrors": lay.mirrors_total,
+               "comm_bytes_ideal": lay.comm_bytes_ideal(),
+               "comm_bytes_model": (
+                   lay.comm_bytes_mirror_sync() if exchange == "dense"
+                   else lay.comm_bytes_halo())}
+        t0 = time.time()
+        try:
+            jitted, args = pagerank_step_for_dryrun(lay, mesh, iters=iters,
+                                                    exchange=exchange)
+            compiled = jitted.lower(*args).compile()
+            coll = collective_bytes(compiled.as_text())
+            total = coll["total"] * k
+            wire = total
+            if exchange == "halo":
+                # the tuple-shaped all-to-all output counts all k lanes
+                # per device, but the self lane never crosses the wire —
+                # drop it so the column is comparable to comm_bytes_halo.
+                # collectives sit once in the fori_loop body, so the HLO
+                # count (and this correction) is per iteration whatever
+                # ``iters`` is
+                wire -= 2 * lay.h_max * 4 * k
+            rec.update({
+                "status": "ok",
+                "compile_s": round(time.time() - t0, 1),
+                "collective_bytes_per_device": coll,
+                "collective_bytes_total": total,
+                "collective_bytes_wire": wire,
+            })
+            print(f"[graph × pagerank × {exchange}] OK  "
+                  f"hlo={wire:.3e}B/iter (fleet wire)  "
+                  f"model={rec['comm_bytes_model']:.3e}B  "
+                  f"ideal={rec['comm_bytes_ideal']:.3e}B")
+        except Exception as e:  # noqa: BLE001
+            rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+            print(f"[graph × pagerank × {exchange}] FAIL: {e}",
+                  file=sys.stderr)
+        recs.append(rec)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if len(ok) == 2:
+        d, h = ok
+        ratio = h["collective_bytes_wire"] / max(
+            d["collective_bytes_wire"], 1)
+        print(f"  dense→halo measured byte ratio: {ratio:.3f} "
+              f"(ideal/dense = "
+              f"{d['comm_bytes_ideal'] / d['comm_bytes_model']:.3f})")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = out_dir / (f"graph__pagerank__k{k}"
+                       f"{('__' + tag) if tag else ''}.json")
+    fname.write_text(json.dumps(recs, indent=1))
+    return recs
 
 
 def _lower_probe(cfg, shape_name, mesh, rules, *, mp, block_kv, loss_chunk):
@@ -339,6 +464,18 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--probe", action="store_true",
                     help="per-layer cost probes (single-pod only)")
+    ap.add_argument("--graph", action="store_true",
+                    help="GAS-engine cell: compile one pagerank step per "
+                         "exchange backend, report measured collective "
+                         "bytes vs the layout's modelled volumes")
+    ap.add_argument("--graph-scale", type=int, default=10)
+    ap.add_argument("--graph-k", type=int, default=8)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="train cells: int8 gradient quantization; also "
+                         "compiles the uncompressed step and prints the "
+                         "collective-byte delta (≈0 in the jit path — "
+                         "GSPMD reduces grads before the hook runs; see "
+                         "repro.dist.compress.make_grad_compressor)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--rules", default="tp", choices=["tp", "cp"])
     ap.add_argument("--block-kv", type=int, default=1024)
@@ -347,6 +484,11 @@ def main():
     args = ap.parse_args()
 
     out_dir = Path(args.out)
+    if args.graph:
+        recs = run_graph_cell(out_dir, scale=args.graph_scale,
+                              k=args.graph_k, tag=args.tag)
+        sys.exit(1 if any(str(r.get("status", "")).startswith("FAIL")
+                          for r in recs) else 0)
     archs = ARCHS if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
@@ -365,7 +507,8 @@ def main():
                 rec = run_cell(arch, shape, mk, out_dir,
                                block_kv=args.block_kv,
                                loss_chunk=args.loss_chunk, tag=args.tag,
-                               rules_name=args.rules)
+                               rules_name=args.rules,
+                               compress=args.compress_grads)
                 if str(rec.get("status", "")).startswith("FAIL"):
                     n_fail += 1
     sys.exit(1 if n_fail else 0)

@@ -47,6 +47,9 @@ def main():
                              "hashing", "dbh", "greedy", "hdrf", "mint"])
     ap.add_argument("--graph", default="web", choices=["web", "social"])
     ap.add_argument("--pagerank", action="store_true")
+    ap.add_argument("--exchange", default="halo",
+                    choices=["dense", "halo"],
+                    help="mirror-sync wire format for --pagerank")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,12 +70,15 @@ def main():
                                  simulate_pagerank)
         lay = build_layout(g.src, g.dst, assign, g.num_vertices, args.k)
         t0 = time.time()
-        pr = simulate_pagerank(lay, iters=30)
+        pr = simulate_pagerank(lay, iters=30, exchange=args.exchange)
         dt = time.time() - t0
         ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
-        print(f"pagerank: {dt:.2f}s  max|err|={np.abs(pr-ref).max():.2e}  "
-              f"comm/iter: mirror={lay.comm_bytes_ideal()/1e6:.2f}MB "
-              f"dense={lay.comm_bytes_dense()/1e6:.2f}MB")
+        print(f"pagerank[{args.exchange}]: {dt:.2f}s  "
+              f"max|err|={np.abs(pr-ref).max():.2e}  "
+              f"comm/iter: ideal={lay.comm_bytes_ideal()/1e6:.2f}MB "
+              f"halo={lay.comm_bytes_halo()/1e6:.2f}MB "
+              f"dense-gather={lay.comm_bytes_mirror_sync()/1e6:.2f}MB "
+              f"allreduce={lay.comm_bytes_dense()/1e6:.2f}MB")
 
 
 if __name__ == "__main__":

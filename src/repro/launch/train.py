@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "adafactor"])
     ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8-quantize gradients before the optimizer "
+                         "(repro.dist.compress); measure the collective-"
+                         "byte delta with launch.dryrun --compress-grads")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--layers", type=int, default=0)
     ap.add_argument("--d-model", type=int, default=0)
@@ -59,9 +63,14 @@ def main():
                             total=args.steps)
     opt = get_optimizer(args.optimizer, schedule=sched)
     opt_state = opt.init(params)
+    compress_fn = None
+    if args.compress_grads:
+        from repro.dist.compress import make_grad_compressor
+        compress_fn = make_grad_compressor()
     step_fn = jax.jit(make_train_step(
         cfg, opt, dtype=jnp.float32, micro_batches=args.micro_batches,
-        block_kv=max(32, args.seq // 4), loss_chunk=max(32, args.seq // 4)))
+        block_kv=max(32, args.seq // 4), loss_chunk=max(32, args.seq // 4),
+        compress_grads=compress_fn))
 
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.batch, seed=args.seed)
