@@ -1,9 +1,11 @@
 """Fig. 8: performance on the real distributed system (PowerGraph →
-shard_map GAS engine).  Reports per-iteration communication volume for both
-exchange backends (dense padded all_gather vs mirror-routed halo
-all_to_all) next to the ragged ideal — the dense→halo byte reduction is the
-paper's mechanism (mirror count) showing up on the wire — plus local
-compute cost per partitioner and wall time of the simulated engine.
+shard_map GAS engine).  Reports per-iteration communication volume for all
+three exchange backends (dense padded all_gather, mirror-routed halo
+all_to_all, int8-quantized halo) next to the ragged ideal — the dense→halo
+byte reduction is the paper's mechanism (mirror count) showing up on the
+wire, and halo→quantized is the per-mirror payload cut composing with it —
+plus local compute cost per partitioner and wall time of the simulated
+engine.
 
 ``layout_build_bench`` times the vectorized ``build_layout`` against the
 retained reference builder (the PR-2 layout-build speedup)."""
@@ -34,18 +36,23 @@ def fig8_pagerank(scale=11, k=8, iters=20, seed=0):
             "comm_mb_dense_padded": round(
                 lay.comm_bytes_mirror_sync() / 1e6, 4),
             "comm_mb_halo_padded": round(lay.comm_bytes_halo() / 1e6, 4),
+            "comm_mb_halo_quantized": round(
+                lay.comm_bytes_halo_quantized() / 1e6, 4),
             "comm_dense_mb": round(lay.comm_bytes_dense() / 1e6, 4),
             "local_edges_max": int(lay.e_max),
             "mirrors": int(lay.mirrors_total),
         }
-        for exchange in ("dense", "halo"):
+        for exchange in ("dense", "halo", "quantized"):
             t0 = time.time()
             pr = simulate_pagerank(lay, iters=iters, exchange=exchange)
             dt = time.time() - t0
             err = float(np.abs(pr - ref).max())
             row[f"engine_seconds_{exchange}"] = round(dt, 3)
             row[f"max_err_{exchange}"] = err
-            assert err < 1e-5, (algo, exchange, err)
+            # delta-coded error feedback converges with the iteration, but
+            # at finite iters the int8 path keeps a small dither floor
+            tol = 1e-5 if exchange != "quantized" else 1e-4
+            assert err < tol, (algo, exchange, err)
         rows.append(row)
     return rows
 

@@ -29,6 +29,11 @@ NOISE_HINTS = ("seconds", "_s", "us_per", "runtime", "err")
 FLAG_ABS_FLOOR = 1e-6
 # fields where bigger is better — flag polarity inverts (drop → ⚠)
 GOOD_UP_HINTS = ("speedup",)
+# bytes/iter and mirror-count columns are the paper's headline quantity:
+# lower is better (the default polarity), and they are never noise — a
+# byte regression must always surface in the delta table, even though
+# "mirrors" etc. would otherwise be eligible for future noise hints
+GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors")
 # numeric fields that identify a row rather than measure it — part of the
 # match key, never diffed (fig3/fig7 emit one row per k with identical
 # string fields, so k etc. must disambiguate)
@@ -52,10 +57,12 @@ def find_bench(path: str) -> Path | None:
 
 
 def row_key(row: dict) -> tuple:
+    # identity numerics + scalar non-numerics; nested structures (e.g. the
+    # dryrun rows' per-device collective-byte dicts) are unhashable and
+    # not identity, so they stay out of the key
     return tuple(sorted((k, v) for k, v in row.items()
                         if k in IDENTITY_FIELDS
-                        or not isinstance(v, (int, float))
-                        or isinstance(v, bool)))
+                        or isinstance(v, (str, bool))))
 
 
 def numeric_fields(row: dict) -> dict:
@@ -65,6 +72,8 @@ def numeric_fields(row: dict) -> dict:
 
 
 def is_noise_field(name: str) -> bool:
+    if any(h in name for h in GOOD_DOWN_HINTS + GOOD_UP_HINTS):
+        return False
     return any(h in name for h in NOISE_HINTS)
 
 

@@ -23,16 +23,19 @@ h = baselines.hashing(gr.src, gr.dst, g.num_vertices, K)
 lay_hash = build_layout(gr.src, gr.dst, h, g.num_vertices, K)
 
 print(f"{'partitioner':10s} {'mirrors':>9s} {'ideal MB/it':>12s} "
-      f"{'halo MB/it':>11s} {'dense MB/it':>12s}")
+      f"{'quant MB/it':>12s} {'halo MB/it':>11s} {'dense MB/it':>12s}")
 for name, lay in (("clugp", lay_clugp), ("hashing", lay_hash)):
     print(f"{name:10s} {lay.mirrors_total:>9d} "
           f"{lay.comm_bytes_ideal()/1e6:>12.3f} "
+          f"{lay.comm_bytes_halo_quantized()/1e6:>12.3f} "
           f"{lay.comm_bytes_halo()/1e6:>11.3f} "
           f"{lay.comm_bytes_mirror_sync()/1e6:>12.3f}")
 
-pr = simulate_pagerank(lay_clugp, iters=30, exchange="halo")
 ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
-print(f"pagerank: max|err|={np.abs(pr-ref).max():.2e} (30 iters)")
+for exchange in ("halo", "quantized"):
+    pr = simulate_pagerank(lay_clugp, iters=30, exchange=exchange)
+    print(f"pagerank[{exchange}]: max|err|={np.abs(pr-ref).max():.2e} "
+          f"(30 iters)")
 
 cc = simulate_cc(lay_clugp, iters=30)
 rcc = reference_cc(g.src, g.dst, g.num_vertices)

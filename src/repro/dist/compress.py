@@ -12,6 +12,11 @@ API:
   compressed_psum(x, axis)               — int8 quantize → psum → dequant
   make_grad_compressor()                 — stateless grads→grads callable
                                            for make_train_step
+  quantize_rows(x) / dequantize_rows(c, s)
+                                         — int8 codes + max-abs scale per
+                                           trailing row; the lane-group
+                                           quantizer the halo exchange's
+                                           quantized wire format reuses
 """
 from __future__ import annotations
 
@@ -30,6 +35,27 @@ def _quantize_dequantize(x: jnp.ndarray) -> jnp.ndarray:
     scale = _scale_of(x)
     q = jnp.clip(jnp.round(x / scale), -_QMAX, _QMAX)
     return q * scale
+
+
+def quantize_rows(x: jnp.ndarray, qmax: float = _QMAX):
+    """Max-abs int8 quantization per trailing row: ``x`` (..., n) →
+    (codes int8 (..., n), scales f32 (...)).  Each leading index gets its
+    own scale — for the halo exchange these rows are per-destination lane
+    groups, so one hot lane can't wash out another destination's
+    precision.  All-zero rows take scale 1 so dequantization is exact."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0)
+    codes = jnp.clip(jnp.round(xf / scales[..., None]),
+                     -qmax, qmax).astype(jnp.int8)
+    return codes, scales
+
+
+def dequantize_rows(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``quantize_rows``: (..., n) int8 codes × (...) scales →
+    (..., n) f32.  Exact for the codes produced by ``quantize_rows`` (the
+    round-trip error lives in the encoder's residual, not here)."""
+    return codes.astype(jnp.float32) * scales[..., None]
 
 
 def zero_residual(grads):

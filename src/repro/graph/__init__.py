@@ -1,6 +1,8 @@
 """Distributed vertex-cut graph engine (the paper's PowerGraph deployment)."""
 from .partition import (PartitionLayout, build_layout,  # noqa: F401
                         build_layout_reference)
-from .engine import (simulate_pagerank, simulate_cc, shard_map_pagerank,  # noqa: F401
-                     pagerank_step_for_dryrun, reference_pagerank,
-                     reference_cc)
+from .engine import (GASProgram, CC_PROGRAM, pagerank_program,  # noqa: F401
+                     simulate_gas, simulate_pagerank, simulate_cc,
+                     shard_map_gas, shard_map_pagerank, shard_map_cc,
+                     gas_step_for_dryrun, pagerank_step_for_dryrun,
+                     reference_pagerank, reference_cc)

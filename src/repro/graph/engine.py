@@ -13,17 +13,31 @@ mirror-sync phases go through the pluggable exchange layer
   routing tables — bytes scale with the mirror count (RF−1)·|V|, the
   quantity the partitioner optimizes, so Fig. 8's mechanism shows up on
   the wire.
+- ``exchange="quantized"``: halo routing with int8 delta-coded lanes +
+  per-lane-group scales and an error-feedback residual threaded through
+  the iteration carry — ~4× fewer payload bytes for fp32 programs, exact
+  int32 passthrough for ``combine="min"`` programs (CC labels).
 
-Two drivers around the same per-device halves:
+The engine is **program-parametric**: a ``GASProgram`` bundles the four
+per-device callables (init / local gather-scatter / apply / optional
+global aux) plus the combine op and wire dtype, and one pair of drivers
+runs any program:
 
-- ``simulate_*``   : stacked (k, …) arrays on one device — used by tests
-                     and host-side benchmarks (bit-identical math).
-- ``shard_map_*``  : one partition per mesh device over axis ``parts`` —
-                     the production path (multi-pod dry-run lowers this).
+- ``simulate_gas(program, …)``   : stacked (k, …) arrays on one device —
+                                   tests and host-side benchmarks.
+- ``shard_map_gas(program, …)``  : one partition per mesh device over axis
+                                   ``parts`` — the production path.
+
+``simulate_pagerank`` / ``shard_map_pagerank`` / ``simulate_cc`` /
+``shard_map_cc`` are thin instantiations of ``pagerank_program()`` /
+``CC_PROGRAM`` over those two drivers, so the simulated and shard_map
+paths run the same per-device math by construction and can't drift.
 """
 from __future__ import annotations
 
-from functools import partial
+from dataclasses import dataclass
+from functools import lru_cache, partial
+from typing import Any, Callable
 
 import numpy as np
 
@@ -36,6 +50,37 @@ from ..dist._compat import shard_map
 from ..dist.halo import get_exchange
 
 DAMPING = 0.85
+# CC labels are int32 vertex ids; the min-identity sentinel marks padded /
+# non-master slots and can never win a minimum against a real id
+CC_SENTINEL = int(np.iinfo(np.int32).max)
+
+
+# ----------------------------------------------------------- program spec
+
+@dataclass(frozen=True)
+class GASProgram:
+    """One GAS computation as per-device callables over the layout's
+    ``device_arrays()`` pytree (all (L_max,)-shaped per device):
+
+      init(dev)               -> initial per-slot values
+      local(value, dev)       -> gather/scatter partials over local edges
+      apply(total, aux, dev)  -> new master-slot values (others get the
+                                 combine identity / sentinel)
+      aux(value, dev)         -> optional per-device scalar, reduced
+                                 globally (psum / stacked sum) before
+                                 ``apply`` — pagerank's dangling mass
+
+    ``combine`` ("sum" | "min") and ``dtype`` fix the mirror-sync wire
+    semantics; the quantized exchange uses them to decide whether the
+    payload may be lossily delta-coded (fp32 sum) or must ship exact
+    (int32 min)."""
+    name: str
+    combine: str
+    dtype: Any
+    init: Callable
+    local: Callable
+    apply: Callable
+    aux: Callable | None = None
 
 
 # ----------------------------------------------------------- per-device math
@@ -64,19 +109,90 @@ def _pagerank_apply(total_in, dangle, dev, num_vertices):
     return jnp.where(dev["vert_mask"] & dev["is_master"], new, 0.0)
 
 
+@lru_cache(maxsize=None)
+def pagerank_program(num_vertices: int) -> GASProgram:
+    """Damped pagerank with dangling-mass redistribution (fp32, sum
+    combine — the quantized exchange may delta-code its mirror lanes).
+    Cached per vertex count so repeated layouts hit the same jit cache."""
+    def init(dev):
+        return jnp.where(dev["vert_mask"], 1.0 / num_vertices, 0.0)
+
+    def apply(total, dangle, dev):
+        return _pagerank_apply(total, dangle, dev, num_vertices)
+
+    return GASProgram(name="pagerank", combine="sum", dtype=jnp.float32,
+                      init=init, local=_local_rank_partial, apply=apply,
+                      aux=_local_dangle)
+
+
+def _cc_init(dev):
+    return jnp.where(dev["vert_mask"], dev["vert_gid"].astype(jnp.int32),
+                     CC_SENTINEL)
+
+
 def _cc_local_min(label, dev):
     """Edge-wise min exchange in both directions (undirected semantics)."""
     l_max = dev["vert_gid"].shape[0]
-    big = jnp.asarray(np.float32(np.inf))
-    lab = jnp.concatenate([jnp.where(dev["vert_mask"], label, big),
-                           jnp.full((1,), big, label.dtype)])
+    lab = jnp.concatenate([jnp.where(dev["vert_mask"], label, CC_SENTINEL),
+                           jnp.full((1,), CC_SENTINEL, label.dtype)])
     s, d, m = dev["edge_src"], dev["edge_dst"], dev["edge_mask"]
-    vs = jnp.where(m, lab[s], big)
-    vd = jnp.where(m, lab[d], big)
+    vs = jnp.where(m, lab[s], CC_SENTINEL)
+    vd = jnp.where(m, lab[d], CC_SENTINEL)
     out = jax.ops.segment_min(vs, d, num_segments=l_max + 1)[:l_max]
     out2 = jax.ops.segment_min(vd, s, num_segments=l_max + 1)[:l_max]
-    cur = jnp.where(dev["vert_mask"], label, big)
+    cur = jnp.where(dev["vert_mask"], label, CC_SENTINEL)
     return jnp.minimum(cur, jnp.minimum(out, out2))
+
+
+def _cc_apply(total, aux, dev):
+    return jnp.where(dev["vert_mask"] & dev["is_master"], total,
+                     CC_SENTINEL)
+
+
+# label propagation / connected components: int32 labels are exact on the
+# wire, so every exchange (incl. "quantized") ships them unquantized
+CC_PROGRAM = GASProgram(name="cc", combine="min", dtype=jnp.int32,
+                        init=_cc_init, local=_cc_local_min, apply=_cc_apply)
+
+
+# ----------------------------------------------------------- shared body
+
+def _gas_body(program: GASProgram, ex, dev, axis: str | None = None):
+    """One GAS iteration as a ``fori_loop`` body over (value, state).
+
+    ``axis=None`` is the stacked form: ``dev`` holds full (k, …) stacks,
+    per-device callables vmap over the leading axis, and the exchange's
+    ``*_stacked`` halves model the collectives.  With a mesh axis it is
+    the per-device form run inside shard_map.  Both forms call the same
+    ``program`` callables, so the simulated and production paths cannot
+    drift."""
+    stacked = axis is None
+
+    def body(_, carry):
+        value, state = carry
+        if program.aux is not None:
+            aux = (jnp.sum(jax.vmap(program.aux)(value, dev)) if stacked
+                   else jax.lax.psum(program.aux(value, dev), axis))
+        else:
+            aux = None
+        if stacked:
+            partial_ = jax.vmap(program.local)(value, dev)
+            total, state = ex.reduce_stacked(partial_, dev,
+                                             program.combine, state)
+            new_master = jax.vmap(
+                lambda t, d: program.apply(t, aux, d))(total, dev)
+            value, state = ex.broadcast_stacked(new_master, dev,
+                                                program.combine, state)
+        else:
+            partial_ = program.local(value, dev)
+            total, state = ex.reduce_to_masters(partial_, dev,
+                                                program.combine, state)
+            new_master = program.apply(total, aux, dev)
+            value, state = ex.broadcast_from_masters(new_master, dev,
+                                                     program.combine, state)
+        return value, state
+
+    return body
 
 
 # ----------------------------------------------------------- simulated driver
@@ -86,38 +202,14 @@ def _stack_dev(layout: PartitionLayout, exchange: str | None = None):
                                   layout.device_arrays(exchange))
 
 
-@partial(jax.jit, static_argnames=("iters", "num_vertices", "exchange"))
-def _sim_pagerank(dev, iters: int, num_vertices: int, exchange: str):
+@partial(jax.jit, static_argnames=("program", "iters", "exchange"))
+def _sim_gas(program: GASProgram, dev, iters: int, exchange: str):
     ex = get_exchange(exchange)
-    rank = jnp.where(dev["vert_mask"], 1.0 / num_vertices, 0.0)
-
-    def body(_, rank):
-        partial_ = jax.vmap(_local_rank_partial)(rank, dev)
-        total = ex.reduce_stacked(partial_, dev)
-        dangle = jnp.sum(jax.vmap(_local_dangle)(rank, dev))
-        new_master = jax.vmap(
-            lambda t, d: _pagerank_apply(t, dangle, d, num_vertices)
-        )(total, dev)
-        return ex.broadcast_stacked(new_master, dev)
-
-    return jax.lax.fori_loop(0, iters, body, rank)
-
-
-@partial(jax.jit, static_argnames=("iters", "exchange"))
-def _sim_cc(dev, iters: int, exchange: str):
-    ex = get_exchange(exchange)
-    label = jnp.where(dev["vert_mask"], dev["vert_gid"].astype(jnp.float32),
-                      jnp.float32(np.inf))
-
-    def body(_, label):
-        part = jax.vmap(_cc_local_min)(label, dev)
-        part = jnp.where(jnp.isfinite(part), part, jnp.float32(3e38))
-        total = ex.reduce_stacked(part, dev, "min")
-        new_master = jnp.where(dev["vert_mask"] & dev["is_master"], total,
-                               jnp.float32(3e38))
-        return ex.broadcast_stacked(new_master, dev)
-
-    return jax.lax.fori_loop(0, iters, body, label)
+    value = jax.vmap(program.init)(dev)
+    state = ex.init_state(dev, program.dtype, program.combine)
+    body = _gas_body(program, ex, dev)
+    value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+    return value
 
 
 def _collect_master_values(layout: PartitionLayout, stacked) -> np.ndarray:
@@ -130,82 +222,98 @@ def _collect_master_values(layout: PartitionLayout, stacked) -> np.ndarray:
     return out
 
 
+def simulate_gas(program: GASProgram, layout: PartitionLayout,
+                 iters: int = 30, exchange: str = "dense") -> np.ndarray:
+    """Stacked one-device driver for any GAS program (bit-identical math
+    to ``shard_map_gas`` — the collectives become transposes/gathers)."""
+    dev = _stack_dev(layout, exchange)
+    values = _sim_gas(program, dev, iters, exchange)
+    return _collect_master_values(layout, values)
+
+
 def simulate_pagerank(layout: PartitionLayout, iters: int = 30,
                       exchange: str = "dense") -> np.ndarray:
-    dev = _stack_dev(layout, exchange)
-    ranks = _sim_pagerank(dev, iters, layout.num_vertices, exchange)
-    return _collect_master_values(layout, ranks)
+    return simulate_gas(pagerank_program(layout.num_vertices), layout,
+                        iters, exchange)
 
 
 def simulate_cc(layout: PartitionLayout, iters: int = 30,
                 exchange: str = "dense") -> np.ndarray:
-    dev = _stack_dev(layout, exchange)
-    labels = _sim_cc(dev, iters, exchange)
-    return _collect_master_values(layout, labels).astype(np.int64)
+    return simulate_gas(CC_PROGRAM, layout, iters,
+                        exchange).astype(np.int64)
 
 
 # ----------------------------------------------------------- shard_map driver
 
-def _pagerank_body(ex, dev, num_vertices, axis):
-    """One GAS iteration as run on each device (inside shard_map)."""
-    def body(_, rank):
-        partial_ = _local_rank_partial(rank, dev)
-        total = ex.reduce_to_masters(partial_, dev)
-        dangle = jax.lax.psum(_local_dangle(rank, dev), axis)
-        new_master = _pagerank_apply(total, dangle, dev, num_vertices)
-        return ex.broadcast_from_masters(new_master, dev)
-    return body
-
-
-def shard_map_pagerank(layout: PartitionLayout, mesh: Mesh,
-                       iters: int = 30, axis: str = "parts",
-                       exchange: str = "dense"):
+def shard_map_gas(program: GASProgram, layout: PartitionLayout, mesh: Mesh,
+                  iters: int = 30, axis: str = "parts",
+                  exchange: str = "dense") -> np.ndarray:
     """Production path: one partition per device along ``axis``.
     Requires mesh axis size == layout.k.  ``exchange`` picks the mirror
-    wire format (see module docstring).  Returns (V,) master ranks."""
+    wire format (see module docstring).  Returns (V,) master values."""
     dev = _stack_dev(layout, exchange)
-    num_vertices = layout.num_vertices
     ex = get_exchange(exchange, axis)
     spec = P(axis)
 
     @partial(shard_map, mesh=mesh,
-             in_specs=(spec, jax.tree_util.tree_map(lambda _: spec, dev)),
+             in_specs=(jax.tree_util.tree_map(lambda _: spec, dev),),
              out_specs=spec)
-    def run(rank, dev):
-        rank = rank[0]
+    def run(dev):
         dev = jax.tree_util.tree_map(lambda x: x[0], dev)
-        body = _pagerank_body(ex, dev, num_vertices, axis)
-        out = jax.lax.fori_loop(0, iters, body, rank)
-        return out[None]
+        value = program.init(dev)
+        state = ex.init_state(dev, program.dtype, program.combine)
+        body = _gas_body(program, ex, dev, axis)
+        value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+        return value[None]
 
-    rank0 = jnp.where(dev["vert_mask"], 1.0 / num_vertices, 0.0)
     with mesh:
-        ranks = run(rank0, dev)
-    return _collect_master_values(layout, ranks)
+        values = run(dev)
+    return _collect_master_values(layout, values)
+
+
+def shard_map_pagerank(layout: PartitionLayout, mesh: Mesh,
+                       iters: int = 30, axis: str = "parts",
+                       exchange: str = "dense") -> np.ndarray:
+    return shard_map_gas(pagerank_program(layout.num_vertices), layout,
+                         mesh, iters=iters, axis=axis, exchange=exchange)
+
+
+def shard_map_cc(layout: PartitionLayout, mesh: Mesh, iters: int = 30,
+                 axis: str = "parts", exchange: str = "dense") -> np.ndarray:
+    return shard_map_gas(CC_PROGRAM, layout, mesh, iters=iters, axis=axis,
+                         exchange=exchange).astype(np.int64)
+
+
+def gas_step_for_dryrun(program: GASProgram, layout: PartitionLayout,
+                        mesh: Mesh, axis: str = "parts", iters: int = 1,
+                        exchange: str = "dense"):
+    """Returns (jitted_fn, example_args) whose .lower() the dry-run compiles
+    — the graph dry-run parses each backend's collective bytes out of the
+    post-SPMD HLO (``launch/dryrun.py --graph``)."""
+    dev = _stack_dev(layout, exchange)
+    ex = get_exchange(exchange, axis)
+    spec = P(axis)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(jax.tree_util.tree_map(lambda _: spec, dev),),
+             out_specs=spec)
+    def step(dev):
+        dev = jax.tree_util.tree_map(lambda x: x[0], dev)
+        value = program.init(dev)
+        state = ex.init_state(dev, program.dtype, program.combine)
+        body = _gas_body(program, ex, dev, axis)
+        value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+        return value[None]
+
+    return jax.jit(step), (dev,)
 
 
 def pagerank_step_for_dryrun(layout: PartitionLayout, mesh: Mesh,
                              axis: str = "parts", iters: int = 1,
                              exchange: str = "dense"):
-    """Returns (jitted_fn, example_args) whose .lower() the dry-run compiles
-    — the graph dry-run parses each backend's collective bytes out of the
-    post-SPMD HLO (``launch/dryrun.py --graph``)."""
-    dev = _stack_dev(layout, exchange)
-    num_vertices = layout.num_vertices
-    ex = get_exchange(exchange, axis)
-    spec = P(axis)
-
-    @partial(shard_map, mesh=mesh,
-             in_specs=(spec, jax.tree_util.tree_map(lambda _: spec, dev)),
-             out_specs=spec)
-    def step(rank, dev):
-        rank = rank[0]
-        dev = jax.tree_util.tree_map(lambda x: x[0], dev)
-        body = _pagerank_body(ex, dev, num_vertices, axis)
-        return jax.lax.fori_loop(0, iters, body, rank)[None]
-
-    rank0 = jnp.where(dev["vert_mask"], 1.0 / num_vertices, 0.0)
-    return jax.jit(step), (rank0, dev)
+    return gas_step_for_dryrun(pagerank_program(layout.num_vertices),
+                               layout, mesh, axis=axis, iters=iters,
+                               exchange=exchange)
 
 
 # ----------------------------------------------------------- oracles

@@ -67,7 +67,10 @@ class PartitionLayout:
     COMMON_TABLES = ("edge_src", "edge_dst", "edge_mask", "vert_gid",
                      "vert_mask", "is_master", "out_deg")
     EXCHANGE_TABLES = {"dense": ("owner", "own_slot", "red_index"),
-                       "halo": ("halo_send", "halo_recv")}
+                       "halo": ("halo_send", "halo_recv"),
+                       # quantized rides the same routing tables; only the
+                       # payload encoding differs (int8 codes + scales)
+                       "quantized": ("halo_send", "halo_recv")}
 
     def device_arrays(self, exchange: str | None = None) -> dict:
         """The pytree of arrays each device needs (leading k axis).
@@ -94,6 +97,16 @@ class PartitionLayout:
         (k−1)·H_max values on the wire per phase (the self block never
         leaves the device)."""
         return 2 * self.k * (self.k - 1) * self.h_max * value_bytes
+
+    def comm_bytes_halo_quantized(self, code_bytes: int = 1,
+                                  scale_bytes: int = 4) -> int:
+        """Quantized halo backend (fp32 programs): each of the k·(k−1)
+        off-diagonal lane groups ships H_max int8 codes plus one fp32
+        max-abs scale per phase — ~4× below ``comm_bytes_halo`` once
+        H_max ≫ scale_bytes.  Min/int programs ship the exact halo
+        payload instead (see ``repro.dist.halo``)."""
+        return 2 * self.k * (self.k - 1) * (
+            self.h_max * code_bytes + scale_bytes)
 
     def comm_bytes_ideal(self, value_bytes: int = 4) -> int:
         """Ragged lower bound: every mirror value moves exactly once per

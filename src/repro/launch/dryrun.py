@@ -298,19 +298,52 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     return rec
 
 
+GRAPH_EXCHANGES = ("dense", "halo", "quantized")
+
+
+def _graph_comm_model(lay, exchange: str, lossy: bool) -> int:
+    """The layout's modelled bytes/iter for one (program, backend) cell.
+    ``lossy`` is ``halo.lossy_payload(program.combine, program.dtype)`` —
+    min/int programs (CC labels) ship the exact full-width halo payload on
+    the quantized backend, so their model is the plain halo volume."""
+    if exchange == "dense":
+        return lay.comm_bytes_mirror_sync()
+    if exchange == "quantized" and lossy:
+        return lay.comm_bytes_halo_quantized()
+    return lay.comm_bytes_halo()
+
+
+def _graph_self_lane_bytes(lay, exchange: str, lossy: bool) -> int:
+    """Per-phase, per-device bytes of the all_to_all self lane (which the
+    HLO output shape counts but never crosses the wire).  One self lane
+    carries exactly one lane group's payload, so it is derived from the
+    layout's comm model (2 phases × k·(k−1) lane groups) rather than
+    restating the wire-format constants."""
+    if exchange == "dense":
+        return 0
+    return _graph_comm_model(lay, exchange, lossy) // (
+        2 * lay.k * (lay.k - 1))
+
+
 def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                    iters: int = 1, tag: str = "") -> list[dict]:
-    """GAS-engine dry-run: lower one pagerank step per exchange backend on
-    a k-device mesh and parse the measured collective bytes out of the
-    post-SPMD HLO, next to the layout's modelled volumes — the dense→halo
-    byte reduction in one JSON record per backend.
+    """GAS-engine dry-run: lower one GAS step per (program × exchange
+    backend) on a k-device mesh — pagerank (fp32 sum) and connected
+    components (int32 min) across dense / halo / quantized — and parse the
+    measured collective bytes out of the post-SPMD HLO, next to the
+    layout's modelled volumes.  One JSON record per cell; the full table
+    also lands in ``results/BENCH_dryrun.json`` (the CI ``graph-dryrun``
+    job's artifact and regression gate).
 
     HLO bytes are per-device; ×k (minus the all_to_all self lane, which
     never crosses the wire) gives the fleet wire volume comparable to
-    ``comm_bytes_mirror_sync`` / ``comm_bytes_halo`` / ``comm_bytes_ideal``.
+    ``comm_bytes_mirror_sync`` / ``comm_bytes_halo`` /
+    ``comm_bytes_halo_quantized`` / ``comm_bytes_ideal``.
     """
     from repro.core import CLUGPConfig, clugp_partition, web_graph
-    from repro.graph import build_layout, pagerank_step_for_dryrun
+    from repro.dist.halo import lossy_payload
+    from repro.graph import (CC_PROGRAM, build_layout, gas_step_for_dryrun,
+                             pagerank_program)
     from repro.launch.mesh import make_graph_mesh
 
     g = web_graph(scale=scale, edge_factor=8, seed=0)
@@ -318,63 +351,97 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                           CLUGPConfig.optimized(k))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
     mesh = make_graph_mesh(k)
+    programs = (("pagerank", pagerank_program(g.num_vertices)),
+                ("cc", CC_PROGRAM))
     recs = []
-    for exchange in ("dense", "halo"):
-        rec = {"bench": "graph_pagerank_step", "exchange": exchange,
-               "k": k, "scale": scale, "iters": iters,
-               "num_vertices": g.num_vertices, "num_edges": g.num_edges,
-               "l_max": lay.l_max, "h_max": lay.h_max,
-               "mirrors": lay.mirrors_total,
-               "comm_bytes_ideal": lay.comm_bytes_ideal(),
-               "comm_bytes_model": (
-                   lay.comm_bytes_mirror_sync() if exchange == "dense"
-                   else lay.comm_bytes_halo())}
-        t0 = time.time()
-        try:
-            jitted, args = pagerank_step_for_dryrun(lay, mesh, iters=iters,
-                                                    exchange=exchange)
-            compiled = jitted.lower(*args).compile()
-            coll = collective_bytes(compiled.as_text())
-            total = coll["total"] * k
-            wire = total
-            if exchange == "halo":
-                # the tuple-shaped all-to-all output counts all k lanes
-                # per device, but the self lane never crosses the wire —
-                # drop it so the column is comparable to comm_bytes_halo.
+    for pname, prog in programs:
+        lossy = lossy_payload(prog.combine, prog.dtype)
+        for exchange in GRAPH_EXCHANGES:
+            rec = {"bench": "graph_dryrun", "program": pname,
+                   "exchange": exchange, "k": k, "scale": scale,
+                   "iters": iters, "num_vertices": g.num_vertices,
+                   "num_edges": g.num_edges, "l_max": lay.l_max,
+                   "h_max": lay.h_max, "mirrors": lay.mirrors_total,
+                   "lossy_payload": lossy,
+                   "comm_bytes_ideal": lay.comm_bytes_ideal(),
+                   "comm_bytes_model": _graph_comm_model(lay, exchange,
+                                                         lossy)}
+            t0 = time.time()
+            try:
+                jitted, args = gas_step_for_dryrun(prog, lay, mesh,
+                                                   iters=iters,
+                                                   exchange=exchange)
+                compiled = jitted.lower(*args).compile()
+                coll = collective_bytes(compiled.as_text())
+                total = coll["total"] * k
                 # collectives sit once in the fori_loop body, so the HLO
-                # count (and this correction) is per iteration whatever
-                # ``iters`` is
-                wire -= 2 * lay.h_max * 4 * k
-            rec.update({
-                "status": "ok",
-                "compile_s": round(time.time() - t0, 1),
-                "collective_bytes_per_device": coll,
-                "collective_bytes_total": total,
-                "collective_bytes_wire": wire,
-            })
-            print(f"[graph × pagerank × {exchange}] OK  "
-                  f"hlo={wire:.3e}B/iter (fleet wire)  "
-                  f"model={rec['comm_bytes_model']:.3e}B  "
-                  f"ideal={rec['comm_bytes_ideal']:.3e}B")
-        except Exception as e:  # noqa: BLE001
-            rec["status"] = f"FAIL: {type(e).__name__}: {e}"
-            rec["traceback"] = traceback.format_exc()[-2000:]
-            print(f"[graph × pagerank × {exchange}] FAIL: {e}",
-                  file=sys.stderr)
-        recs.append(rec)
-    ok = [r for r in recs if r.get("status") == "ok"]
-    if len(ok) == 2:
-        d, h = ok
-        ratio = h["collective_bytes_wire"] / max(
-            d["collective_bytes_wire"], 1)
-        print(f"  dense→halo measured byte ratio: {ratio:.3f} "
-              f"(ideal/dense = "
-              f"{d['comm_bytes_ideal'] / d['comm_bytes_model']:.3f})")
+                # count (and the self-lane correction) is per iteration
+                # whatever ``iters`` is
+                wire = total - 2 * k * _graph_self_lane_bytes(lay, exchange,
+                                                              lossy)
+                rec.update({
+                    "status": "ok",
+                    "compile_s": round(time.time() - t0, 1),
+                    "collective_bytes_per_device": coll,
+                    "collective_bytes_total": total,
+                    "collective_bytes_wire": wire,
+                })
+                print(f"[graph × {pname} × {exchange}] OK  "
+                      f"hlo={wire:.3e}B/iter (fleet wire)  "
+                      f"model={rec['comm_bytes_model']:.3e}B  "
+                      f"ideal={rec['comm_bytes_ideal']:.3e}B")
+            except Exception as e:  # noqa: BLE001
+                rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+                rec["traceback"] = traceback.format_exc()[-2000:]
+                print(f"[graph × {pname} × {exchange}] FAIL: {e}",
+                      file=sys.stderr)
+            recs.append(rec)
+        ok = {r["exchange"]: r for r in recs
+              if r["program"] == pname and r.get("status") == "ok"}
+        if len(ok) == len(GRAPH_EXCHANGES):
+            d = ok["dense"]["collective_bytes_wire"]
+            h = ok["halo"]["collective_bytes_wire"]
+            q = ok["quantized"]["collective_bytes_wire"]
+            print(f"  {pname}: dense→halo {h / max(d, 1):.3f}×  "
+                  f"halo→quantized {q / max(h, 1):.3f}×  "
+                  f"(ideal/dense = "
+                  f"{ok['dense']['comm_bytes_ideal'] / max(d, 1):.3f})")
     out_dir.mkdir(parents=True, exist_ok=True)
-    fname = out_dir / (f"graph__pagerank__k{k}"
+    fname = out_dir / (f"graph__gas__k{k}"
                        f"{('__' + tag) if tag else ''}.json")
     fname.write_text(json.dumps(recs, indent=1))
+    bench_rows = [{kk: v for kk, v in r.items() if kk != "traceback"}
+                  for r in recs]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_dryrun.json").write_text(
+        json.dumps(bench_rows, indent=1))
     return recs
+
+
+def check_graph_ordering(recs: list[dict]) -> list[str]:
+    """The CI regression gate on the paper's headline quantity: per
+    program, measured wire bytes/iter must order quantized < halo < dense.
+    Programs whose quantized cell ships an exact payload (min/int — the
+    record's ``lossy_payload`` flag, derived from the program spec) allow
+    quantized == halo.  Returns the list of violations (empty == pass)."""
+    msgs = [f"{r.get('program', '?')}/{r.get('exchange', '?')}: "
+            f"{r.get('status')}"
+            for r in recs if r.get("status") != "ok"]
+    by = {(r["program"], r["exchange"]): r
+          for r in recs if r.get("status") == "ok"}
+    for prog in sorted({p for p, _ in by}):
+        cells = [by.get((prog, e)) for e in GRAPH_EXCHANGES]
+        if None in cells:
+            continue    # the missing cell is already reported above
+        d, h, q = (c["collective_bytes_wire"] for c in cells)
+        if h >= d:
+            msgs.append(f"{prog}: halo bytes/iter {h} ≥ dense {d}")
+        if cells[2].get("lossy_payload", True):
+            if q >= h:
+                msgs.append(f"{prog}: quantized bytes/iter {q} ≥ halo {h}")
+        elif q > h:
+            msgs.append(f"{prog}: quantized bytes/iter {q} > halo {h}")
+    return msgs
 
 
 def _lower_probe(cfg, shape_name, mesh, rules, *, mp, block_kv, loss_chunk):
@@ -465,11 +532,17 @@ def main():
     ap.add_argument("--probe", action="store_true",
                     help="per-layer cost probes (single-pod only)")
     ap.add_argument("--graph", action="store_true",
-                    help="GAS-engine cell: compile one pagerank step per "
-                         "exchange backend, report measured collective "
-                         "bytes vs the layout's modelled volumes")
+                    help="GAS-engine cells: compile one pagerank + one CC "
+                         "step per exchange backend (dense/halo/"
+                         "quantized), report measured collective bytes vs "
+                         "the layout's modelled volumes, and write "
+                         "results/BENCH_dryrun.json")
     ap.add_argument("--graph-scale", type=int, default=10)
     ap.add_argument("--graph-k", type=int, default=8)
+    ap.add_argument("--check", action="store_true",
+                    help="with --graph: exit 1 unless measured wire bytes "
+                         "order quantized < halo < dense per program (CC "
+                         "allows quantized == halo — exact int32 payload)")
     ap.add_argument("--compress-grads", action="store_true",
                     help="train cells: int8 gradient quantization; also "
                          "compiles the uncompressed step and prints the "
@@ -487,8 +560,17 @@ def main():
     if args.graph:
         recs = run_graph_cell(out_dir, scale=args.graph_scale,
                               k=args.graph_k, tag=args.tag)
-        sys.exit(1 if any(str(r.get("status", "")).startswith("FAIL")
-                          for r in recs) else 0)
+        n_fail = sum(str(r.get("status", "")).startswith("FAIL")
+                     for r in recs)
+        if args.check:
+            msgs = check_graph_ordering(recs)
+            for m in msgs:
+                print(f"collective-bytes gate: {m}", file=sys.stderr)
+            if not msgs:
+                print("collective-bytes gate: quantized < halo < dense "
+                      "holds for every program")
+            sys.exit(1 if msgs else 0)
+        sys.exit(1 if n_fail else 0)
     archs = ARCHS if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])

@@ -48,7 +48,7 @@ def main():
     ap.add_argument("--graph", default="web", choices=["web", "social"])
     ap.add_argument("--pagerank", action="store_true")
     ap.add_argument("--exchange", default="halo",
-                    choices=["dense", "halo"],
+                    choices=["dense", "halo", "quantized"],
                     help="mirror-sync wire format for --pagerank")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -76,6 +76,7 @@ def main():
         print(f"pagerank[{args.exchange}]: {dt:.2f}s  "
               f"max|err|={np.abs(pr-ref).max():.2e}  "
               f"comm/iter: ideal={lay.comm_bytes_ideal()/1e6:.2f}MB "
+              f"quantized={lay.comm_bytes_halo_quantized()/1e6:.2f}MB "
               f"halo={lay.comm_bytes_halo()/1e6:.2f}MB "
               f"dense-gather={lay.comm_bytes_mirror_sync()/1e6:.2f}MB "
               f"allreduce={lay.comm_bytes_dense()/1e6:.2f}MB")

@@ -4,9 +4,32 @@ import sys
 import textwrap
 from pathlib import Path
 
+import numpy as np
 import pytest
 
 REPO = Path(__file__).resolve().parents[1]
+
+
+def random_graph_and_assign(seed: int, k: int, n: int = 300,
+                            e_factor: int = 5):
+    """Zipf-ish random digraph with compacted vertex ids plus a random
+    edge→partition assignment — the shared generator for the exchange /
+    quantized-halo suites.  Compaction matters: the engine (like the
+    repo's generators) assumes every vertex 0..n-1 appears in some edge;
+    isolated vertices would be dangling mass the distributed tables can't
+    see."""
+    rng = np.random.default_rng(seed)
+    e = n * e_factor
+    src = rng.integers(0, n, e)
+    dst = (rng.zipf(1.7, e) - 1) % n
+    keep = src != dst
+    src, dst = src[keep].astype(np.int64), dst[keep].astype(np.int64)
+    verts = np.unique(np.concatenate([src, dst]))
+    src = np.searchsorted(verts, src)
+    dst = np.searchsorted(verts, dst)
+    n = int(verts.shape[0])
+    assign = rng.integers(0, k, src.shape[0]).astype(np.int32)
+    return src, dst, n, assign
 
 
 def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600):

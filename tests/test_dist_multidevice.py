@@ -56,6 +56,51 @@ def test_shard_map_pagerank_halo_matches_dense(multidevice):
     """)
 
 
+def test_shard_map_cc_and_quantized_match_reference(multidevice):
+    """shard_map_cc ≡ simulate_cc ≡ reference_cc on every backend, and the
+    quantized pagerank driver matches its stacked simulation bit-for-bit
+    (same program spec, same exchange math) and the oracle within the
+    error-feedback tolerance; its compiled step ships int8 lanes."""
+    multidevice("""
+    import numpy as np
+    from repro.core import web_graph, clugp_partition, CLUGPConfig
+    from repro.graph import (build_layout, shard_map_cc, shard_map_pagerank,
+                             simulate_cc, simulate_pagerank,
+                             pagerank_step_for_dryrun, reference_cc,
+                             reference_pagerank)
+    from repro.launch.mesh import make_graph_mesh
+
+    g = web_graph(scale=10, edge_factor=6, seed=3)
+    res = clugp_partition(g.src, g.dst, g.num_vertices,
+                          CLUGPConfig.optimized(8))
+    lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, 8)
+    mesh = make_graph_mesh(8)
+
+    ref_cc = reference_cc(g.src, g.dst, g.num_vertices)
+    for exchange in ('dense', 'halo', 'quantized'):
+        cc_sm = shard_map_cc(lay, mesh, iters=30, exchange=exchange)
+        cc_sim = simulate_cc(lay, iters=30, exchange=exchange)
+        np.testing.assert_array_equal(cc_sm, cc_sim, err_msg=exchange)
+        np.testing.assert_array_equal(cc_sm, ref_cc, err_msg=exchange)
+
+    ref_pr = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
+    pr_sm = shard_map_pagerank(lay, mesh, iters=30, exchange='quantized')
+    pr_sim = simulate_pagerank(lay, iters=30, exchange='quantized')
+    np.testing.assert_array_equal(pr_sm, pr_sim)
+    assert np.abs(pr_sm - ref_pr).max() < 1e-5
+
+    jitted, args = pagerank_step_for_dryrun(lay, mesh, exchange='quantized')
+    hlo = jitted.lower(*args).compile().as_text()
+    coll = [line for line in hlo.splitlines()
+            if line.strip().lstrip('%').startswith(
+                ('all-to-all', 'all-gather'))]
+    assert any('s8[' in line for line in coll), 'int8 lanes must ship'
+    assert not any(line.strip().lstrip('%').startswith('all-gather')
+                   for line in coll), 'quantized must not all-gather'
+    print('cc + quantized shard_map ok')
+    """)
+
+
 def test_sp_decode_matches_full_attention(multidevice):
     multidevice("""
     import numpy as np, jax, jax.numpy as jnp

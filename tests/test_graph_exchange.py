@@ -12,24 +12,7 @@ from repro.graph import (build_layout, build_layout_reference,
                          reference_cc, reference_pagerank, simulate_cc,
                          simulate_pagerank)
 
-
-def _random_graph_and_assign(seed: int, k: int, n: int = 300,
-                             e_factor: int = 5):
-    rng = np.random.default_rng(seed)
-    e = n * e_factor
-    src = rng.integers(0, n, e)
-    dst = (rng.zipf(1.7, e) - 1) % n
-    keep = src != dst
-    src, dst = src[keep].astype(np.int64), dst[keep].astype(np.int64)
-    # compact ids: the engine (like the repo's generators) assumes every
-    # vertex 0..n-1 appears in some edge — isolated vertices would be
-    # dangling mass the distributed tables can't see
-    verts = np.unique(np.concatenate([src, dst]))
-    src = np.searchsorted(verts, src)
-    dst = np.searchsorted(verts, dst)
-    n = int(verts.shape[0])
-    assign = rng.integers(0, k, src.shape[0]).astype(np.int32)
-    return src, dst, n, assign
+from conftest import random_graph_and_assign as _random_graph_and_assign
 
 
 # ------------------------------------------------------- layout equivalence

@@ -1,0 +1,127 @@
+"""Quantized halo exchange: error-feedback pagerank accuracy, exact int32
+CC passthrough, byte-model ordering, and int8 lane round-trip properties.
+(The shard_map driver equivalences run in tests/test_dist_multidevice.py.)"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import CLUGPConfig, clugp_partition
+from repro.core.graphgen import web_graph
+from repro.dist.halo import get_exchange
+from repro.graph import (CC_PROGRAM, build_layout, pagerank_program,
+                         reference_cc, reference_pagerank, simulate_cc,
+                         simulate_pagerank)
+
+from conftest import random_graph_and_assign as _random_graph_and_assign
+
+
+# ------------------------------------------------- error-feedback pagerank
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_quantized_pagerank_converges_to_reference(seed):
+    """Delta-coded int8 lanes with error feedback: the residual carries the
+    quantization error across iterations, so 30 iterations land within a
+    tight tolerance of the fp32 oracle instead of dithering at one int8
+    quantization step."""
+    src, dst, n, assign = _random_graph_and_assign(seed, 8, n=400)
+    lay = build_layout(src, dst, assign, n, 8)
+    ref = reference_pagerank(src, dst, n, iters=30)
+    pr_q = simulate_pagerank(lay, iters=30, exchange="quantized")
+    assert np.abs(pr_q - ref).max() < 1e-5
+    # and it matches the exact halo backend to the same tolerance
+    pr_h = simulate_pagerank(lay, iters=30, exchange="halo")
+    assert np.abs(pr_q - pr_h).max() < 1e-5
+
+
+def test_quantized_pagerank_on_clugp_partition():
+    g = web_graph(scale=10, edge_factor=8, seed=0)
+    k = 8
+    res = clugp_partition(g.src, g.dst, g.num_vertices,
+                          CLUGPConfig.optimized(k))
+    lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
+    ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
+    pr_q = simulate_pagerank(lay, iters=30, exchange="quantized")
+    assert np.abs(pr_q - ref).max() < 1e-5
+
+
+# ------------------------------------------------- exact int32 CC path
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_quantized_cc_is_exact(seed):
+    """combine="min" programs skip quantization (int32 labels are exact on
+    the wire), so quantized CC is bit-identical to dense/halo CC."""
+    src, dst, n, assign = _random_graph_and_assign(seed, 8, n=400)
+    lay = build_layout(src, dst, assign, n, 8)
+    ref = reference_cc(src, dst, n)
+    cc_q = simulate_cc(lay, iters=40, exchange="quantized")
+    cc_d = simulate_cc(lay, iters=40, exchange="dense")
+    touched = np.zeros(n, bool)
+    touched[src] = touched[dst] = True
+    np.testing.assert_array_equal(cc_q[touched], ref[touched])
+    np.testing.assert_array_equal(cc_q, cc_d)
+
+
+def test_quantized_state_empty_for_min_and_int_programs():
+    """The quantized exchange only materializes reference/residual state
+    for lossily-coded (fp32, sum) programs; CC's int32 min payload rides
+    the exact halo path with an empty carry."""
+    src, dst, n, assign = _random_graph_and_assign(2, 4, n=120)
+    lay = build_layout(src, dst, assign, n, 4)
+    dev = {f: jnp.asarray(getattr(lay, f))
+           for f in ("halo_send", "halo_recv")}
+    ex = get_exchange("quantized")
+    assert ex.init_state(dev, CC_PROGRAM.dtype, CC_PROGRAM.combine) == ()
+    prog = pagerank_program(n)
+    state = ex.init_state(dev, prog.dtype, prog.combine)
+    assert set(state) == {"reduce", "bcast"}
+    for phase in state.values():
+        assert set(phase) == {"sref", "sres", "rref"}
+        for arr in phase.values():
+            assert arr.shape == lay.halo_send.shape
+            assert not arr.any()
+
+
+# ------------------------------------------------- byte model ordering
+
+def test_comm_model_quantized_below_halo_below_dense():
+    g = web_graph(scale=10, edge_factor=8, seed=0)
+    k = 8
+    res = clugp_partition(g.src, g.dst, g.num_vertices,
+                          CLUGPConfig.optimized(k))
+    lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
+    assert lay.comm_bytes_halo_quantized() < lay.comm_bytes_halo()
+    assert lay.comm_bytes_halo() < lay.comm_bytes_mirror_sync()
+    # int8 codes + one fp32 scale per lane group, 2 phases/iter
+    assert lay.comm_bytes_halo_quantized() == \
+        2 * k * (k - 1) * (lay.h_max + 4)
+
+
+def test_dryrun_ordering_gate_flags_regressions():
+    from repro.launch.dryrun import check_graph_ordering
+
+    def rec(program, exchange, wire, lossy=True):
+        return {"program": program, "exchange": exchange, "status": "ok",
+                "lossy_payload": lossy, "collective_bytes_wire": wire}
+
+    good = [rec("pagerank", "dense", 100), rec("pagerank", "halo", 40),
+            rec("pagerank", "quantized", 12),
+            rec("cc", "dense", 100), rec("cc", "halo", 40),
+            # cc ships the exact payload → quantized == halo is allowed
+            rec("cc", "quantized", 40, lossy=False)]
+    assert check_graph_ordering(good) == []
+    bad = [rec("pagerank", "dense", 100), rec("pagerank", "halo", 100),
+           rec("pagerank", "quantized", 100)]
+    assert len(check_graph_ordering(bad)) == 2
+    # a lossy program's quantized cell must be strictly below halo
+    tie = good[:2] + [rec("pagerank", "quantized", 40)]
+    assert len(check_graph_ordering(tie)) == 1
+    failed = good[:5] + [{"program": "cc", "exchange": "quantized",
+                          "status": "FAIL: boom"}]
+    assert any("boom" in m for m in check_graph_ordering(failed))
+
+
+# the int8 lane round-trip property tests (hypothesis) live in
+# tests/test_properties_halo.py so this module still runs where the
+# optional hypothesis dep is absent (module-level importorskip skips a
+# whole file, as tests/test_properties.py relies on)

@@ -1,0 +1,78 @@
+"""Hypothesis property tests for the quantized halo wire format: int8
+lane-group quantization round-trip and pack→quantize→unpack through real
+routing tables.  (Deterministic quantized-exchange coverage lives in
+tests/test_graph_quantized.py; this module self-skips without the
+optional hypothesis dep, like tests/test_properties.py.)"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional dev dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.dist.compress import dequantize_rows, quantize_rows  # noqa: E402
+from repro.dist.halo import _pack  # noqa: E402
+from repro.graph import build_layout  # noqa: E402
+
+from conftest import random_graph_and_assign  # noqa: E402
+
+
+@given(st.integers(0, 2**16), st.integers(2, 8), st.integers(1, 16),
+       st.floats(1e-6, 1e6))
+@settings(max_examples=40, deadline=None)
+def test_int8_lane_quantize_roundtrip(seed, k, h_max, magnitude):
+    """Per-lane-group max-abs quantization: codes stay in [-127, 127] and
+    the dequantized row is within half a quantization step of the input,
+    per lane group, at any magnitude."""
+    rng = np.random.default_rng(seed)
+    lanes = (rng.standard_normal((k, h_max)) * magnitude).astype(np.float32)
+    codes, scales = quantize_rows(jnp.asarray(lanes))
+    codes, scales = np.asarray(codes), np.asarray(scales)
+    assert codes.dtype == np.int8
+    assert (np.abs(codes) <= 127).all()
+    deq = np.asarray(dequantize_rows(jnp.asarray(codes),
+                                     jnp.asarray(scales)))
+    np.testing.assert_allclose(deq, lanes, atol=float(scales.max()) / 2 +
+                               1e-6 * magnitude)
+
+
+def test_all_zero_rows_roundtrip_exactly():
+    # scale falls back to 1 so dequantization stays exact
+    z_codes, z_scales = quantize_rows(jnp.zeros((3, 5), jnp.float32))
+    assert not np.asarray(z_codes).any()
+    np.testing.assert_array_equal(np.asarray(z_scales), 1.0)
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_int8_pack_unpack_roundtrip_through_halo_tables(seed):
+    """End-to-end lane property on real routing tables: pack mirror values
+    into destination lane groups, quantize, dequantize, scatter back —
+    every mirror slot recovers its own value within half its lane group's
+    quantization step, and pad lanes stay exactly zero."""
+    k = 4
+    src, dst, n, assign = random_graph_and_assign(seed, k, n=200)
+    lay = build_layout(src, dst, assign, n, k)
+    rng = np.random.default_rng(seed + 1)
+    for p in range(k):
+        values = rng.standard_normal(lay.l_max).astype(np.float32)
+        lanes = np.asarray(_pack(jnp.asarray(values),
+                                 jnp.asarray(lay.halo_send[p]), "sum"))
+        pad_mask = lay.halo_send[p] == lay.l_max
+        np.testing.assert_array_equal(lanes[pad_mask], 0.0)
+        codes, scales = quantize_rows(jnp.asarray(lanes))
+        deq = np.asarray(dequantize_rows(codes, scales))
+        step = np.asarray(scales)[:, None]
+        valid = ~pad_mask
+        assert (np.abs(deq - lanes)[valid] <=
+                (step / 2 + 1e-7).repeat(lanes.shape[1], 1)[valid]).all()
+        # scatter back: each valid lane targets its own mirror slot
+        back = np.zeros(lay.l_max + 1, np.float32)
+        back[lay.halo_send[p].reshape(-1)] = deq.reshape(-1)
+        mirror = lay.vert_mask[p] & ~lay.is_master[p]
+        slots = np.flatnonzero(mirror)
+        if slots.size:
+            assert np.abs(back[slots] - values[slots]).max() <= \
+                float(np.asarray(scales).max()) / 2 + 1e-6
