@@ -39,6 +39,10 @@ def main() -> None:
                 scale=8, ks=(4,)),
             "fig7_runtime": lambda: bp.fig7_runtime_vs_k(
                 scale=8, ks=(4,)),
+            # backend sweep incl. the sharded-backend smoke (runs on the
+            # CI job's 8 virtual devices; skips itself when too few)
+            "fig12_runtime": lambda: bp.fig12_runtime_vs_k(
+                scale=8, ks=(4,), nodes=4, repeats=1),
             "fig8_pagerank": lambda: fig8_pagerank(scale=8, k=4, iters=10),
             "layout_build": lambda: layout_build_bench(scale=8, k=4),
             "expert_placement": lambda: expert_placement_bench(
@@ -58,6 +62,8 @@ def main() -> None:
         "layout_build": lambda: layout_build_bench(scale=scale),
         "fig9_ablation": lambda: bp.fig9_ablation(scale=scale),
         "fig10_parallel": lambda: bp.fig10_parallelization(scale=scale),
+        "fig12_runtime": lambda: bp.fig12_runtime_vs_k(
+            scale=scale, ks=(16, 64), nodes=4),
         "fig11_weight": lambda: bp.fig11_weight_and_balance(scale=scale),
         "kernels": kernels_microbench,
         "expert_placement": expert_placement_bench,

@@ -32,13 +32,17 @@ GOOD_UP_HINTS = ("speedup",)
 # bytes/iter and mirror-count columns are the paper's headline quantity:
 # lower is better (the default polarity), and they are never noise — a
 # byte regression must always surface in the delta table, even though
-# "mirrors" etc. would otherwise be eligible for future noise hints
-GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors")
+# "mirrors" etc. would otherwise be eligible for future noise hints.
+# "edge_us" is the partitioner-backend runtime column (BENCH_partition):
+# unlike the legacy wall-time columns it is a best-of-N warm measurement
+# and the artifact's whole point, so it diffs lower-is-better instead of
+# hiding as noise
+GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us")
 # numeric fields that identify a row rather than measure it — part of the
 # match key, never diffed (fig3/fig7 emit one row per k with identical
 # string fields, so k etc. must disambiguate)
 IDENTITY_FIELDS = ("k", "scale", "iters", "seed", "shards", "E", "K",
-                   "n_nodes", "exchange")
+                   "n_nodes", "exchange", "nodes", "restream", "backend")
 
 
 def find_bench(path: str) -> Path | None:

@@ -6,6 +6,9 @@ from .clustering import (streaming_clustering_np, streaming_clustering_jax,  # n
 from .game import (contract, best_response_rounds, greedy_assign,  # noqa: F401
                    lambda_max, lambda_from_weight, potential, global_cost,
                    ClusterGraph, GameResult)
-from .transform import transform_np, transform_jax  # noqa: F401
-from .pipeline import CLUGPConfig, CLUGPResult, clugp_partition, clugp_partition_parallel  # noqa: F401
+from .transform import (transform_np, transform_jax,  # noqa: F401
+                        majority_vertex_map_np, majority_vertex_map_jax)
+from .pipeline import CLUGPConfig, CLUGPResult, clugp_partition  # noqa: F401
+from .partitioner import (BACKENDS, partition,  # noqa: F401
+                          clugp_partition_parallel)
 from . import baselines, metrics, theory  # noqa: F401

@@ -22,6 +22,7 @@ migration (the paper's Holl baseline and the CLUGP-S ablation).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import numpy as np
 
@@ -142,106 +143,286 @@ def streaming_clustering_np(src: np.ndarray, dst: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# JAX scan version — identical transition function, dense carried state.
+# JAX scan version — identical transition function, device-resident.
+#
+# Engineered around XLA:CPU's copy-insertion for loop-carried buffers: a
+# scatter whose indices are *computed* (data-dependent) copies the whole
+# buffer every step (and any cross-buffer dependence does too), so a naive
+# per-edge scan over (V,)/(id_cap,) state costs a full memcpy per edge
+# (measured ~480 µs/edge at scale 13; a register-tracked variant with one
+# fused scatter still ~10-15 µs/edge).  The stream is therefore processed
+# in BLOCKS of ``block_size`` edges: per block, the ≤2B touched vertices
+# and their ≤2B current clusters are gathered into KB-sized local tables
+# once (vectorized sort-unique), an inner scan runs the exact per-edge
+# transition on local indices (fresh ids get local slots 2B..6B-1 in
+# creation order, so global ids stay monotone), and the block's deltas
+# scatter back to the global ``clu``/``deg``/``vol`` in one shot — the
+# big-buffer copies amortize over B edges.  Split events are emitted as
+# scan outputs (→ divided/replicas), so the carried state is just the
+# tables, the id counter, and the two streamed-count scalars.
 # ---------------------------------------------------------------------------
 
-def _cluster_step(state, edge, *, vmax: float, allow_split: bool,
-                  split_degree_factor: float):
-    clu, deg, vol, divided, replicas, next_id, seen_deg, seen_v = state
-    u, v = edge[0], edge[1]
-    self_loop = u == v
+def _edge_step_local(carry, x, *, vmax: float, allow_split: bool,
+                     split_degree_factor: float, B: int):
+    """One streamed edge on the block-local tables, all decisions in
+    scalar registers (pure fusable arithmetic — XLA:CPU pays a kernel-call
+    per gather/scatter inside a loop body, so the step does exactly two
+    fused gathers and one fused scatter and keeps everything else
+    elementwise).
 
-    def alloc(clu, next_id, seen_v, x):
-        has = clu[x] >= 0
-        cid = jnp.where(has, clu[x], next_id)
-        clu = clu.at[x].set(cid)
-        next_id = jnp.where(has, next_id, next_id + 1)
-        seen_v = jnp.where(has, seen_v, seen_v + 1)
-        return clu, next_id, seen_v, cid
+    ``buf`` layout: [0, 2B) vertex slot → local cluster slot (-1
+    unallocated); [2B, 4B) vertex slot → streamed degree; [4B, 10B) local
+    cluster volumes (slots 0..2B-1 = clusters present at block start,
+    2B..6B-1 = fresh, in creation order so local slot ``2B + (nid -
+    nid0)`` ↔ global id ``nid``).  The ≤4 cluster slots an edge can touch
+    hold volumes in registers v0..v3; ``pu``/``pv`` point at the register
+    of u's/v's current cluster.  Dead edges (self-loops / padding) zero
+    every delta and write slots back unchanged."""
+    buf, nid, nid0, seen_v, seen_deg = carry
+    ints = x
+    lu, lv_ = ints[0], ints[1]
+    live = ints[2] != 0
+    scrap = 6 * B - 1                 # top fresh slot absorbs dead writes
 
-    clu, next_id, seen_v, cu = alloc(clu, next_id, seen_v, u)
-    clu, next_id, seen_v, cv = alloc(clu, next_id, seen_v, v)
-    deg = deg.at[u].add(1).at[v].add(1)
-    vol = vol.at[cu].add(1).at[cv].add(1)
-    seen_deg = seen_deg + 2
+    def sel(p, a0, a1, a2, a3):
+        return jnp.where(p == 0, a0, jnp.where(p == 1, a1,
+                         jnp.where(p == 2, a2, a3)))
+
+    def bump(p, x, a0, a1, a2, a3):
+        return (a0 + jnp.where(p == 0, x, 0), a1 + jnp.where(p == 1, x, 0),
+                a2 + jnp.where(p == 2, x, 0), a3 + jnp.where(p == 3, x, 0))
+
+    # one fused gather: both endpoints' cluster slots + streamed degrees
+    g = buf[jnp.stack([lu, lv_, 2 * B + lu, 2 * B + lv_])]
+    cu0, cv0 = g[0], g[1]
+    du = g[2] + 1                     # degrees AFTER line 6's increment
+    dv = g[3] + 1
+    duf = du.astype(jnp.float32)
+    dvf = dv.astype(jnp.float32)
+
+    # allocation (lines 3-5): u first, then v
+    preu, prev = cu0 >= 0, cv0 >= 0
+    id0 = jnp.where(preu, cu0, 2 * B + (nid - nid0))
+    nid = nid + (live & ~preu).astype(jnp.int32)
+    id1 = jnp.where(prev, cv0, 2 * B + (nid - nid0))
+    nid = nid + (live & ~prev).astype(jnp.int32)
+    same = id0 == id1
+    seen_v = seen_v + (live & ~preu).astype(jnp.int32) \
+        + (live & ~prev).astype(jnp.int32)
+    seen_deg = seen_deg + 2 * live.astype(jnp.int32)
+    if split_degree_factor > 0.0:
+        dthr = split_degree_factor * seen_deg.astype(jnp.float32) \
+            / jnp.maximum(seen_v, 1).astype(jnp.float32)
+    else:
+        dthr = jnp.float32(0.0)
+
+    # register volumes (v2/v3 are the fresh split slots, created empty)
+    vg = buf[jnp.stack([4 * B + jnp.clip(cu0, 0, scrap),
+                        4 * B + jnp.clip(cv0, 0, scrap)])]
+    v0 = jnp.where(preu, vg[0], 0)
+    v1 = jnp.where(prev & ~same, vg[1], 0)
+    v2 = v3 = jnp.int32(0)
+    i0, i1 = v0, v1
+    lvflag = live.astype(jnp.int32)
+    pu = jnp.int32(0)
+    pv = jnp.where(same, 0, 1)
+    v0, v1, v2, v3 = bump(pu, lvflag, v0, v1, v2, v3)
+    v0, v1, v2, v3 = bump(pv, lvflag, v0, v1, v2, v3)
 
     if allow_split:
-        dthresh = split_degree_factor * seen_deg.astype(jnp.float32) \
-            / jnp.maximum(seen_v, 1).astype(jnp.float32)
-        same = cu == cv
-
-        def split_one(carry, target, fire):
-            clu, vol, divided, replicas, next_id = carry
-            cx = clu[target]
-            dx = deg[target]
-            nc = next_id
-            clu = clu.at[target].set(jnp.where(fire, nc, cx))
-            vol = vol.at[cx].add(jnp.where(fire, -dx, 0))
-            vol = vol.at[nc].add(jnp.where(fire, dx, 0))
-            divided = divided.at[target].set(divided[target] | fire)
-            replicas = replicas.at[target].add(fire.astype(jnp.int32))
-            next_id = next_id + fire.astype(jnp.int32)
-            return (clu, vol, divided, replicas, next_id)
-
-        carry = (clu, vol, divided, replicas, next_id)
         # same-cluster overflow → split only the higher-degree endpoint;
-        # different clusters → split u first (Alg. 2 lines 8-13)
-        x = jnp.where(deg[u] >= deg[v], u, v)
-        target1 = jnp.where(same, x, u)
-        d1ok = deg[target1].astype(jnp.float32) >= dthresh
-        fire1 = (vol[clu[target1]] >= vmax) & d1ok
-        carry = split_one(carry, target1, fire1)
-        clu, vol, divided, replicas, next_id = carry
-        # v-split only applies in the different-cluster branch (14-18)
-        d2ok = deg[v].astype(jnp.float32) >= dthresh
-        fire2 = (~same) & (vol[clu[v]] >= vmax) & d2ok
-        carry = split_one(carry, v, fire2)
-        clu, vol, divided, replicas, next_id = carry
+        # different clusters → split u first (lines 8-13), then v (14-18)
+        x_is_u = du >= dv
+        t1_is_u = jnp.where(same, x_is_u, True)
+        pt1 = jnp.where(t1_is_u, pu, pv)
+        dt1 = jnp.where(t1_is_u, du, dv)
+        fire1 = live & (sel(pt1, v0, v1, v2, v3) >= vmax) \
+            & (jnp.where(t1_is_u, duf, dvf) >= dthr)
+        f1 = fire1.astype(jnp.int32)
+        v0, v1, v2, v3 = bump(pt1, -dt1 * f1, v0, v1, v2, v3)
+        v2 = v2 + dt1 * f1
+        pu = jnp.where(fire1 & t1_is_u, 2, pu)
+        pv = jnp.where(fire1 & ~t1_is_u, 2, pv)
+        id2 = 2 * B + (nid - nid0)
+        nid = nid + f1
+        fire2 = live & ~same & (sel(pv, v0, v1, v2, v3) >= vmax) \
+            & (dvf >= dthr)
+        f2 = fire2.astype(jnp.int32)
+        v0, v1, v2, v3 = bump(pv, -dv * f2, v0, v1, v2, v3)
+        v3 = v3 + dv * f2
+        id3 = 2 * B + (nid - nid0)
+        nid = nid + f2
+        pv = jnp.where(fire2, 3, pv)
+    else:
+        fire1 = fire2 = live & False
+        t1_is_u = fire1
+        id2 = id3 = jnp.int32(scrap)
 
-    cu, cv = clu[u], clu[v]
-    both_room = (vol[cu] < vmax) & (vol[cv] < vmax) & (cu != cv)
-    du, dv = deg[u], deg[v]
-    # migration post-guard: must not overflow the target
-    u_moves = both_room & (vol[cu] <= vol[cv]) & (vol[cv] + du < vmax)
-    v_moves = both_room & (vol[cu] > vol[cv]) & (vol[cu] + dv < vmax)
-    clu = clu.at[u].set(jnp.where(u_moves, cv, clu[u]))
-    clu = clu.at[v].set(jnp.where(v_moves, cu, clu[v]))
-    vol = vol.at[cu].add(jnp.where(u_moves, -du, 0) + jnp.where(v_moves, dv, 0))
-    vol = vol.at[cv].add(jnp.where(u_moves, du, 0) + jnp.where(v_moves, -dv, 0))
+    # migration (lines 20-26) with the post-guard
+    vu_cur = sel(pu, v0, v1, v2, v3)
+    vv_cur = sel(pv, v0, v1, v2, v3)
+    both_room = live & (pu != pv) & (vu_cur < vmax) & (vv_cur < vmax)
+    u_moves = both_room & (vu_cur <= vv_cur) & (vv_cur + du < vmax)
+    v_moves = both_room & (vu_cur > vv_cur) & (vu_cur + dv < vmax)
+    mu = u_moves.astype(jnp.int32)
+    mv = v_moves.astype(jnp.int32)
+    v0, v1, v2, v3 = bump(pu, -du * mu + dv * mv, v0, v1, v2, v3)
+    v0, v1, v2, v3 = bump(pv, du * mu - dv * mv, v0, v1, v2, v3)
+    pu, pv = (jnp.where(u_moves, pv, pu), jnp.where(v_moves, pu, pv))
 
-    # a self loop must leave the state untouched
-    def freeze(new, old):
-        return jax.tree_util.tree_map(
-            lambda n, o: jnp.where(self_loop, o, n), new, old)
+    # end-of-step write: ONE fused 8-lane scatter-add — the two vertex
+    # cluster-pointer deltas, the two degree increments, and the ≤4
+    # touched volume slots.  Inside a loop body every scatter at computed
+    # indices costs XLA:CPU a buffer copy + kernel call (~1.3 µs), so the
+    # step does exactly one.
+    newu = jnp.where(live, sel(pu, id0, id1, id2, id3), cu0)
+    newv = jnp.where(live, sel(pv, id0, id1, id2, id3), cv0)
+    lvflag = live.astype(jnp.int32)
+    ids = jnp.stack([
+        lu, lv_,
+        2 * B + lu, 2 * B + lv_,
+        4 * B + jnp.clip(jnp.where(live, id0, scrap), 0, scrap),
+        4 * B + jnp.clip(jnp.where(same, scrap, id1), 0, scrap),
+        4 * B + jnp.clip(jnp.where(fire1, id2, scrap), 0, scrap),
+        4 * B + jnp.clip(jnp.where(fire2, id3, scrap), 0, scrap)])
+    d = jnp.stack([jnp.where(lu != lv_, newu - cu0, 0),
+                   newv - cv0,
+                   lvflag, lvflag,
+                   v0 - i0, v1 - i1, v2, v3])
+    buf = buf.at[ids].add(d)
+    fire_u = fire1 & t1_is_u
+    fire_v = (fire1 & ~t1_is_u) | fire2
+    packed = (fire_u.astype(jnp.int32) + 2 * fire_v.astype(jnp.int32))
+    return (buf, nid, nid0, seen_v, seen_deg), packed
 
-    new_state = (clu, deg, vol, divided, replicas, next_id, seen_deg, seen_v)
-    return freeze(new_state, state), None
+
+_BIG_ID = np.int32(2 ** 31 - 1)
+
+
+def _block_step(carry, x, *, vmax: float, allow_split: bool,
+                split_degree_factor: float, cap: int, num_vertices: int,
+                B: int):
+    """Process one block of B edges: localize → inner scan → write back."""
+    clu, deg, vol, nid, seen_v, seen_deg = carry
+    bu, bv = x
+    scrap = cap - 1
+
+    # local vertex table: dense slots for the ≤2B distinct endpoints
+    verts = jnp.concatenate([bu, bv])
+    perm = jnp.argsort(verts)
+    svert = verts[perm]
+    firstv = jnp.concatenate([jnp.ones((1,), bool),
+                              svert[1:] != svert[:-1]])
+    lidx_sorted = (jnp.cumsum(firstv.astype(jnp.int32)) - 1)
+    lv_of_pos = jnp.zeros((2 * B,), jnp.int32).at[perm].set(lidx_sorted)
+    uvg = jnp.full((2 * B,), num_vertices, jnp.int32).at[
+        lidx_sorted].set(svert)
+    lu, lv_ = lv_of_pos[:B], lv_of_pos[B:]
+
+    # local cluster table: dense slots for those vertices' current clusters
+    cids = clu[jnp.clip(uvg, 0, num_vertices - 1)]
+    validc = (uvg < num_vertices) & (cids >= 0)
+    keyc = jnp.where(validc, cids, _BIG_ID)
+    ucl = jnp.sort(keyc)
+    # local cluster slot of each vertex's current cluster (or -1)
+    lc = jnp.where(validc,
+                   jnp.searchsorted(ucl, keyc).astype(jnp.int32), -1)
+    lvol0 = jnp.where(ucl < _BIG_ID,
+                      vol[jnp.clip(ucl, 0, scrap)], 0).astype(jnp.int32)
+    ldeg0 = deg[jnp.clip(uvg, 0, num_vertices - 1)]
+
+    # fused local state: [0, 2B) vertex → cluster slot, [2B, 4B) vertex
+    # degree, [4B, 10B) cluster volumes
+    buf = jnp.concatenate([lc, ldeg0, lvol0,
+                           jnp.zeros((4 * B,), jnp.int32)])
+    nid0 = nid
+    inner = partial(_edge_step_local, vmax=vmax, allow_split=allow_split,
+                    split_degree_factor=split_degree_factor, B=B)
+    live = (bu != bv).astype(jnp.int32)
+    ints = jnp.stack([lu, lv_, live], axis=1)   # one slice per step
+    (buf, nid, _, seen_v, seen_deg), fires = jax.lax.scan(
+        inner, (buf, nid, nid0, seen_v, seen_deg), ints)
+    lclu, ldeg, lvol = buf[:2 * B], buf[2 * B:4 * B], buf[4 * B:]
+
+    # write back: vertex → global cluster id (fresh slots map to the ids
+    # they were created under) + degrees, then one fused delta scatter
+    # into vol
+    glob_of = jnp.concatenate([ucl, nid0 + jnp.arange(4 * B, dtype=jnp.int32)])
+    newclu = jnp.where(lclu >= 0,
+                       glob_of[jnp.clip(lclu, 0, 6 * B - 1)], -1)
+    uvg_safe = jnp.clip(uvg, 0, num_vertices)
+    clu = clu.at[uvg_safe].set(newclu, mode="drop")
+    deg = deg.at[uvg_safe].set(ldeg, mode="drop")
+    dvol = lvol - jnp.concatenate([lvol0, jnp.zeros((4 * B,), jnp.int32)])
+    ids = jnp.where(jnp.concatenate([ucl < _BIG_ID,
+                                     dvol[2 * B:] != 0]),
+                    jnp.clip(glob_of, 0, scrap), scrap)
+    vol = vol.at[ids].add(dvol)
+    return (clu, deg, vol, nid, seen_v, seen_deg), fires
 
 
 def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
                              allow_split: bool = True,
-                             split_degree_factor: float = 0.0):
-    """lax.scan form; returns raw (non-compacted) labels + state arrays."""
+                             split_degree_factor: float = 0.0,
+                             id_cap: int | None = None,
+                             block_size: int = 128):
+    """Blocked lax.scan form; returns raw (non-compacted) labels + state
+    arrays (clu, deg, divided, replicas, next_id) — bit-identical to
+    ``streaming_clustering_np``.
+
+    ``id_cap`` bounds the cluster-id space (the global volume table,
+    copied once per *block*).  The worst case is ``num_vertices + 2·E +
+    2`` (the default); callers that can retry (the partitioner backends)
+    pass a tight guess and re-run with a doubled cap iff the returned
+    ``next_id`` hits it — an overflowed run clips fresh ids into the
+    scrap slot, so its labels are invalid but the overflow is detectable.
+    """
     E = src.shape[0]
-    cap = num_vertices + 2 * E + 2
-    state = (
-        jnp.full((num_vertices,), -1, dtype=jnp.int32),
-        jnp.zeros((num_vertices,), dtype=jnp.int32),
-        jnp.zeros((cap,), dtype=jnp.int32),
-        jnp.zeros((num_vertices,), dtype=bool),
-        jnp.zeros((num_vertices,), dtype=jnp.int32),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.int32(0),
-    )
-    edges = jnp.stack([jnp.asarray(src, jnp.int32),
-                       jnp.asarray(dst, jnp.int32)], axis=1)
-    step = lambda s, e: _cluster_step(
-        s, e, vmax=float(vmax), allow_split=allow_split,
-        split_degree_factor=float(split_degree_factor))
-    (clu, deg, vol, divided, replicas, next_id, _, _), _ = jax.lax.scan(
-        step, state, edges)
+    cap = int(id_cap) if id_cap is not None else num_vertices + 2 * E + 2
+    B = int(block_size)
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    # pad to whole blocks with dead (self-loop) edges
+    nb = max(1, -(-E // B))
+    pad = nb * B - E
+    def pad_to_blocks(a, fill):
+        return jnp.concatenate(
+            [a, jnp.full((pad,), fill, a.dtype)]).reshape(nb, B)
+    xs = (pad_to_blocks(src, 0), pad_to_blocks(dst, 0))
+    carry = (jnp.full((num_vertices,), -1, dtype=jnp.int32),
+             jnp.zeros((num_vertices,), dtype=jnp.int32),
+             jnp.zeros((cap,), dtype=jnp.int32),
+             jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    # vmax may be a python float or a traced scalar (the sharded backend
+    # derives each device's V_max from its slice's real edge count)
+    step = partial(_block_step, vmax=jnp.float32(vmax),
+                   allow_split=allow_split,
+                   split_degree_factor=float(split_degree_factor),
+                   cap=cap, num_vertices=num_vertices, B=B)
+    (clu, deg, _, next_id, _, _), fires = jax.lax.scan(step, carry, xs)
+    fires = fires.reshape(-1)[:E]
+    fire_u = (fires & 1) > 0
+    fire_v = (fires & 2) > 0
+    divided = (jnp.zeros((num_vertices,), bool)
+               .at[src].max(fire_u).at[dst].max(fire_v))
+    replicas = (jnp.zeros((num_vertices,), jnp.int32)
+                .at[src].add(fire_u.astype(jnp.int32))
+                .at[dst].add(fire_v.astype(jnp.int32)))
     return clu, deg, divided, replicas, next_id
+
+
+def compact_labels_jax(clu, cap: int):
+    """In-graph equivalent of ``_compact_labels``: raw cluster ids (< cap)
+    → dense 0..m-1 ids in ascending raw-id order (the same order
+    ``np.unique`` produces, so the jit pipeline's labels are bit-identical
+    to the host path's).  Returns (compact int32[V] with -1 preserved, m).
+    """
+    valid = clu >= 0
+    used = jnp.zeros((cap,), jnp.bool_).at[
+        jnp.where(valid, clu, cap)].set(True, mode="drop")
+    ranks = (jnp.cumsum(used.astype(jnp.int32)) - 1)
+    compact = jnp.where(valid, ranks[jnp.clip(clu, 0, cap - 1)], -1)
+    return compact.astype(jnp.int32), used.sum().astype(jnp.int32)
 
 
 def clustering_result_from_jax(clu, deg, divided, replicas) -> ClusteringResult:

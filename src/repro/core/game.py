@@ -182,8 +182,11 @@ def best_response_rounds(cg: ClusterGraph, k: int, lam: float | None = None,
 
 
 def greedy_assign(cg: ClusterGraph, k: int) -> np.ndarray:
-    """CLUGP-G ablation (§VI-B): big clusters → least-loaded partitions."""
-    order = np.argsort(-cg.sizes)
+    """CLUGP-G ablation (§VI-B): big clusters → least-loaded partitions.
+    Stable sort so ties break by cluster id — the jit backend's
+    ``jax_greedy_assign`` (jnp.argsort is stable) then matches bit-for-bit.
+    """
+    order = np.argsort(-cg.sizes, kind="stable")
     loads = np.zeros(k, dtype=np.int64)
     assign = np.zeros(cg.m, dtype=np.int32)
     for c in order:
@@ -198,6 +201,300 @@ def greedy_assign(cg: ClusterGraph, k: int) -> np.ndarray:
 # block; the Pallas kernel in repro.kernels.game_bestresponse implements the
 # same contraction with CSR tiles.
 # ---------------------------------------------------------------------------
+
+def jax_greedy_assign(sizes, k: int):
+    """jit/shard_map form of ``greedy_assign`` over padded (m_cap,) sizes.
+    Bit-identical to the host version: both sort stably by (-size, id) and
+    break load ties toward the lowest partition id.  Padded clusters have
+    size 0 — they land wherever argmin points but carry no vertices and
+    add no load."""
+    m_cap = sizes.shape[0]
+    order = jnp.argsort(-sizes)                 # jnp.argsort is stable
+
+    def body(i, carry):
+        loads, assign = carry
+        c = order[i]
+        p = jnp.argmin(loads).astype(jnp.int32)
+        return loads.at[p].add(sizes[c]), assign.at[c].set(p)
+
+    loads0 = jnp.zeros((k,), sizes.dtype)
+    assign0 = jnp.zeros((m_cap,), jnp.int32)
+    _, assign = jax.lax.fori_loop(0, m_cap, body, (loads0, assign0))
+    return assign
+
+
+def jax_game_rounds(xs, xd, sizes, row_tot, k: int, lam, *,
+                    batch_size: int, max_rounds: int, seed: int,
+                    use_pallas: bool = False, block_m: int = 256,
+                    axis: str | None = None, damping: float = 0.5):
+    """Batched best-response rounds (Alg. 3 + §V-D) as a pure jax program.
+
+    The cluster graph arrives as its cross-edge list: ``xs``/``xd`` are the
+    (padded) cluster endpoints of every inter-cluster edge — padding uses
+    the out-of-range sentinel ``m_cap`` so scatter-adds drop it.  Each
+    batch recomputes its cut-mass rows from the live assignment (the
+    host's per-batch snapshot refresh), plays Jacobi *within* the batch,
+    and updates the load table between batches (Gauss–Seidel across
+    batches).  Under ``axis`` (shard_map) each device owns a private id
+    space and acts as one §V-D batch: load deltas are psum'd after every
+    batch so remote players see a fresh global load vector, and the
+    convergence test is the psum'd move count.
+
+    Jacobi-within-batch needs ``damping``: unlike the host's Gauss–Seidel
+    sweep, simultaneous best responses herd toward the currently
+    least-loaded partitions and oscillate, so each round only a random
+    ``damping`` fraction of improving players actually moves (the standard
+    parallel-local-search fix).  Damped Jacobi plateaus rather than
+    reaching an exact Nash point (a small cycle of players keeps wanting
+    to chase each other), so termination uses the game's own potential
+    Φ (Thm 4): the round loop tracks the best-Φ assignment seen and stops
+    once Φ has not improved for ``stall_rounds`` consecutive rounds —
+    returning the best snapshot, not the last thrash.
+
+    ``lam`` is a traced scalar (λ_max of the streamed cluster graph).
+    With ``use_pallas`` the per-batch argmin sweep runs on the
+    ``game_bestresponse`` Pallas kernel (k padded to a 128-lane multiple);
+    otherwise the identical XLA fallback math.  Returns (assign (m_cap,)
+    int32, rounds)."""
+    m_cap = sizes.shape[0]
+    kpad = ((k + 127) // 128) * 128 if use_pallas else k
+    sizes = sizes.astype(jnp.float32)
+    row_tot = row_tot.astype(jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    n_batches = max(1, -(-m_cap // batch_size))
+    ar = jnp.arange(m_cap)
+
+    key = jax.random.PRNGKey(seed)
+    if axis is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis))
+    assign0 = jax.random.randint(key, (m_cap,), 0, k, dtype=jnp.int32)
+    loads0 = jnp.zeros((kpad,), jnp.float32).at[assign0].add(sizes)
+    if axis is not None:
+        loads0 = jax.lax.psum(loads0, axis)
+
+    def psum_(x):
+        return jax.lax.psum(x, axis) if axis is not None else x
+
+    def batch_body(b, carry):
+        assign, loads, moved, rnd = carry
+        aff = (jnp.zeros((m_cap, kpad), jnp.float32)
+               .at[xs, assign[jnp.clip(xd, 0, m_cap - 1)]]
+               .add(1.0, mode="drop")
+               .at[xd, assign[jnp.clip(xs, 0, m_cap - 1)]]
+               .add(1.0, mode="drop"))
+        if use_pallas:
+            from ..kernels.game_bestresponse import game_bestresponse
+            interpret = jax.default_backend() != "tpu"
+            best, best_cost = game_bestresponse(
+                aff, sizes, row_tot, assign, loads, lam=lam, k=k,
+                block_m=block_m, interpret=interpret)
+        else:
+            pids = jax.lax.broadcasted_iota(jnp.int32, (m_cap, kpad), 1)
+            own = (pids == assign[:, None]).astype(jnp.float32)
+            loads_ex = loads[None, :] - sizes[:, None] * own
+            cost = (lam / k) * sizes[:, None] * (loads_ex + sizes[:, None]) \
+                + 0.5 * (row_tot[:, None] - aff)
+            best = jnp.argmin(cost, axis=1).astype(jnp.int32)
+            best_cost = jnp.min(cost, axis=1)
+        cost_cur = (lam / k) * sizes * loads[assign] \
+            + 0.5 * (row_tot - aff[ar, assign])
+        in_batch = (ar >= b * batch_size) & (ar < (b + 1) * batch_size)
+        # strict improvement with an f32-relative margin: absolute 1e-9
+        # (the host's f64 threshold) is below float32 resolution at
+        # realistic cost magnitudes and lets cost ties flap forever
+        margin = 1e-6 + 1e-5 * jnp.abs(cost_cur)
+        wants = in_batch & (best_cost + margin < cost_cur)
+        damp_key = jax.random.fold_in(key, rnd * n_batches + b + 1)
+        # decay the move probability round by round: late-game herding of
+        # small clusters between near-equal partitions is what keeps
+        # Jacobi sweeps from settling
+        p = jnp.maximum(damping * 0.92 ** rnd.astype(jnp.float32), 0.08)
+        move = wants & jax.random.bernoulli(damp_key, p, (m_cap,))
+        msz = jnp.where(move, sizes, 0.0)
+        delta = (jnp.zeros((kpad,), jnp.float32)
+                 .at[best].add(msz).at[assign].add(-msz))
+        assign = jnp.where(move, best, assign)
+        loads = loads + psum_(delta)
+        moved = moved + psum_(wants.sum().astype(jnp.int32))
+        return assign, loads, moved, rnd
+
+    def potential(assign, loads):
+        """Φ (Definition 4) from the live tables — the cut mass is
+        recomputed from the cross-edge list; Σ_i (row_tot − aff[i,a_i])
+        double-counts each symmetrized pair, hence the 0.25."""
+        aff = (jnp.zeros((m_cap, kpad), jnp.float32)
+               .at[xs, assign[jnp.clip(xd, 0, m_cap - 1)]]
+               .add(1.0, mode="drop")
+               .at[xd, assign[jnp.clip(xs, 0, m_cap - 1)]]
+               .add(1.0, mode="drop"))
+        cut = psum_(jnp.sum(row_tot - aff[ar, assign]))
+        load_sq = jnp.sum(loads * loads)        # loads are already global
+        return (lam / (2 * k)) * load_sq + 0.25 * cut
+
+    stall_rounds = 4
+
+    def round_body(carry):
+        assign, loads, rnd, _, best_assign, best_phi, stall = carry
+        assign, loads, moved, _ = jax.lax.fori_loop(
+            0, n_batches, batch_body, (assign, loads, jnp.int32(0), rnd))
+        phi = potential(assign, loads)
+        better = phi < best_phi - 1e-6 * jnp.abs(best_phi)
+        best_assign = jnp.where(better, assign, best_assign)
+        best_phi = jnp.minimum(phi, best_phi)
+        stall = jnp.where(better, 0, stall + 1)
+        return assign, loads, rnd + 1, moved, best_assign, best_phi, stall
+
+    def cond(carry):
+        _, _, rnd, moved, _, _, stall = carry
+        return (moved > 0) & (rnd < max_rounds) & (stall < stall_rounds)
+
+    # best_phi starts at a huge FINITE value: with inf the round-1
+    # improvement test computes inf - inf = NaN, 'better' is False, and
+    # best_assign would stay the random initial assignment
+    _, _, rounds, _, best_assign, _, _ = jax.lax.while_loop(
+        cond, round_body,
+        (assign0, loads0, jnp.int32(0), jnp.int32(1), assign0,
+         jnp.float32(3e38), jnp.int32(0)))
+    return best_assign, rounds
+
+
+def jax_cluster_csr(xs, xd, m_cap: int, nnz_cap: int):
+    """In-graph aggregated edge list of the cluster multigraph from its
+    cross-edge endpoints (padded lanes = ``m_cap``): the distinct
+    symmetrized (row, col) pairs with their multiplicities, compacted
+    into ``nnz_cap`` lanes (pad row = ``m_cap``).  Returns (row, col, w,
+    overflow) — callers retry with a doubled ``nnz_cap`` when the flag
+    fires, like the partitioner's other adaptive caps.  Aggregation
+    matters twice: the per-round cut-mass scatter walks nnz lanes at
+    ~100 ns each on XLA:CPU, and distinct pairs are ~10× fewer than raw
+    cross edges on web graphs."""
+    # int32 keys: fine while m_cap·(m_cap+1) < 2³¹, i.e. m_cap ≤ ~46k —
+    # the partitioner backends fall back to the Jacobi game above that
+    if m_cap * (m_cap + 1) >= 2 ** 31:
+        raise ValueError(
+            f"jax_cluster_csr: m_cap={m_cap} overflows the int32 "
+            f"pair-key space (limit ~46340); use the 'xla'/'pallas' "
+            f"game kernel instead")
+    big = jnp.int32(m_cap * m_cap)
+    ok = (xs < m_cap) & (xd < m_cap)
+    key = jnp.concatenate([xs * m_cap + xd, xd * m_cap + xs])
+    key = jnp.where(jnp.concatenate([ok, ok]), key, big)
+    sk = jnp.sort(key)
+    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    first = first & (sk < big)
+    start = jnp.searchsorted(sk, sk, side="left")
+    mult = jnp.searchsorted(sk, sk, side="right") - start
+    rank = jnp.cumsum(first.astype(jnp.int32)) - 1
+    slot = jnp.where(first, rank, nnz_cap)
+    row = jnp.full((nnz_cap,), m_cap, jnp.int32).at[slot].set(
+        (sk // m_cap).astype(jnp.int32), mode="drop")
+    col = jnp.zeros((nnz_cap,), jnp.int32).at[slot].set(
+        (sk % m_cap).astype(jnp.int32), mode="drop")
+    w = jnp.zeros((nnz_cap,), jnp.float32).at[slot].set(
+        mult.astype(jnp.float32), mode="drop")
+    overflow = (jnp.where(first, rank, -1).max() + 1) > nnz_cap
+    return row, col, w, overflow
+
+
+def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
+                       max_rounds: int, seed: int,
+                       axis: str | None = None):
+    """Gauss–Seidel-on-loads best response as a lax.scan over clusters —
+    the CPU-fast form of Alg. 3 (the batched-Jacobi ``jax_game_rounds``
+    needs damping and ~10× the rounds).  Per round the cut-mass table
+    aff[i, p] is computed once from the round-start assignment (one
+    aggregated scatter over the distinct cluster pairs); the sweep then
+    plays clusters sequentially against the LIVE load table, i.e. one
+    round = one §V-D batch snapshot for the cut term with Gauss–Seidel
+    load accounting.  The snapshot approximation can cycle instead of
+    reaching an exact Nash point, so termination tracks the potential Φ
+    (Thm 4): the loop keeps the best-Φ assignment seen and stops when a
+    sweep moves nothing or Φ stalls for ``stall_rounds`` rounds.
+
+    Under ``axis`` each device sweeps its private clusters (one batch
+    per device) and loads/moves are psum'd between rounds."""
+    m_cap = sizes.shape[0]
+    sizes = sizes.astype(jnp.float32)
+    row_tot = row_tot.astype(jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+
+    key = jax.random.PRNGKey(seed)
+    if axis is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis))
+    assign0 = jax.random.randint(key, (m_cap,), 0, k, dtype=jnp.int32)
+    loads0 = jnp.zeros((k,), jnp.float32).at[assign0].add(sizes)
+    if axis is not None:
+        loads0 = jax.lax.psum(loads0, axis)
+
+    lanes = jnp.arange(k)
+    ar = jnp.arange(m_cap, dtype=jnp.int32)
+
+    def cluster_step(carry, x):
+        assign, loads, moved = carry
+        i, aff, sz, rt = x
+        cur = assign[i]
+        own = (lanes == cur).astype(jnp.float32)
+        loads_ex = loads - sz * own
+        cost = (lam / k) * sz * (loads_ex + sz) + 0.5 * (rt - aff)
+        best = jnp.argmin(cost).astype(jnp.int32)
+        move = cost[best] + 1e-6 + 1e-5 * jnp.abs(cost[cur]) < cost[cur]
+        newa = jnp.where(move, best, cur)
+        loads = loads + sz * ((lanes == newa).astype(jnp.float32) - own) \
+            * move.astype(jnp.float32)
+        assign = assign.at[i].set(newa)     # i is streamed in → in-place
+        return (assign, loads, moved + move.astype(jnp.int32)), None
+
+    def aff_of(assign):
+        return (jnp.zeros((m_cap, k), jnp.float32)
+                .at[row, assign[jnp.clip(col, 0, m_cap - 1)]]
+                .add(w, mode="drop"))
+
+    def phi_of(assign, loads, aff):
+        """Φ (Definition 4); Σ_i (row_tot − aff[i,a_i]) double-counts
+        each symmetrized pair, hence the 0.25."""
+        cut = jnp.sum(row_tot - aff[ar, assign])
+        if axis is not None:
+            cut = jax.lax.psum(cut, axis)
+        return (lam / (2 * k)) * jnp.sum(loads * loads) + 0.25 * cut
+
+    stall_rounds = 4
+
+    def round_body(carry):
+        assign, loads, rnd, _, best_assign, best_phi, stall = carry
+        aff = aff_of(assign)
+        phi = phi_of(assign, loads, aff)
+        better = phi < best_phi
+        best_assign = jnp.where(better, assign, best_assign)
+        stall = jnp.where(phi < best_phi - 1e-6 * jnp.abs(best_phi),
+                          0, stall + 1)
+        best_phi = jnp.minimum(phi, best_phi)
+        (assign, loads, moved), _ = jax.lax.scan(
+            cluster_step, (assign, loads, jnp.int32(0)),
+            (ar, aff, sizes, row_tot))
+        if axis is not None:
+            # remote batches see this round's deltas only now (§V-D
+            # shared-nothing approximation)
+            local = jnp.zeros((k,), jnp.float32).at[assign].add(sizes)
+            loads = jax.lax.psum(local, axis)
+            moved = jax.lax.psum(moved, axis)
+        return (assign, loads, rnd + 1, moved, best_assign, best_phi,
+                stall)
+
+    def cond(carry):
+        _, _, rnd, moved, _, _, stall = carry
+        return (moved > 0) & (rnd < max_rounds) & (stall < stall_rounds)
+
+    # finite sentinel: an inf best_phi makes the stall margin NaN on
+    # round 1 (inf - inf) and silently burns one stall round
+    assign, loads, rounds, _, best_assign, best_phi, _ = jax.lax.while_loop(
+        cond, round_body,
+        (assign0, loads0, jnp.int32(0), jnp.int32(1), assign0,
+         jnp.float32(3e38), jnp.int32(0)))
+    # the final sweep's state was never Φ-checked inside the loop
+    phi = phi_of(assign, loads, aff_of(assign))
+    best_assign = jnp.where(phi < best_phi, assign, best_assign)
+    return best_assign, rounds
+
 
 def jax_best_response_round(S, sizes, assign, loads, k: int, lam: float,
                             batch_slice=None):

@@ -1,13 +1,17 @@
-"""The CLUGP three-pass pipeline (paper §III) + the parallel variant.
+"""The CLUGP three-pass pipeline (paper §III) — host reference path.
 
 ``clugp_partition`` = streaming clustering → cluster-partitioning game →
 partition transformation.  Ablations: ``split=False`` (CLUGP-S),
-``game=False`` (CLUGP-G, greedy cluster placement).
+``game=False`` (CLUGP-G, greedy cluster placement).  ``restream > 0``
+re-consumes the stream that many extra times with the previous pass's
+realized vertex→partition majority as the prior (free-cut reuse +
+load-aware reassign) — prioritized restreaming, beyond the paper.
 
-``clugp_partition_parallel`` mirrors §III-C's distributed mode: the edge
-stream is split across ``n_nodes`` (each node clusters + games its local
-sub-stream against a private id space) and the per-node edge assignments are
-concatenated — the paper's "combine partial partitioning results".
+This module is the **"np" backend** of the backend-parametric partitioner
+(``repro.core.partitioner``): the interpreted host loops stay as the
+equivalence oracle, while the ``"jit"`` and ``"sharded"`` backends run the
+same three passes device-resident.  The old ``clugp_partition_parallel``
+host loop over nodes lives on there as the sharded combine's reference.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ from .clustering import (ClusteringResult, default_vmax,
                          streaming_clustering_np)
 from .game import (ClusterGraph, best_response_rounds, contract,
                    greedy_assign, lambda_from_weight, lambda_max)
-from .transform import transform_np
+from .transform import majority_vertex_map_np, transform_np
 from . import metrics
 
 
@@ -35,6 +39,8 @@ class CLUGPConfig:
     max_rounds: int = 64
     relative_weight: float | None = None   # Fig. 11b sweep; None ⇒ λ_max
     effective_sizes: bool = False      # beyond-paper: balance |c_i|+boundary
+    restream: int = 0                  # extra prioritized-restream passes
+    kernel: str = "auto"               # game sweep: "auto" | "pallas" | "xla"
     seed: int = 0
 
     @staticmethod
@@ -56,9 +62,9 @@ class CLUGPConfig:
 @dataclass
 class CLUGPResult:
     assign: np.ndarray
-    clustering: ClusteringResult
-    cluster_graph: ClusterGraph
-    cluster_assign: np.ndarray
+    clustering: ClusteringResult | None
+    cluster_graph: ClusterGraph | None
+    cluster_assign: np.ndarray | None
     game_rounds: int
     stats: dict = field(default_factory=dict)
 
@@ -91,41 +97,20 @@ def clugp_partition(src: np.ndarray, dst: np.ndarray, num_vertices: int,
     vertex_part = cluster_assign[np.maximum(clus.clu, 0)].astype(np.int32)
     assign = transform_np(src, dst, vertex_part, clus.deg, clus.divided,
                           cfg.k, cfg.tau)
+    # Restream passes: the realized edge placement becomes the next prior
+    rf_trace = []
+    for _ in range(cfg.restream):
+        rf_trace.append(metrics.replication_factor(
+            src, dst, assign, num_vertices, cfg.k))
+        vp = majority_vertex_map_np(src, dst, assign, num_vertices, cfg.k)
+        assign = transform_np(src, dst, vp, clus.deg, clus.divided,
+                              cfg.k, cfg.tau)
     res = CLUGPResult(assign, clus, cg, cluster_assign, rounds)
     res.stats = metrics.summarize(src, dst, assign, num_vertices, cfg.k)
     res.stats["num_clusters"] = clus.num_clusters
     res.stats["game_rounds"] = rounds
-    return res
-
-
-def clugp_partition_parallel(src: np.ndarray, dst: np.ndarray,
-                             num_vertices: int, cfg: CLUGPConfig,
-                             n_nodes: int = 4) -> CLUGPResult:
-    """Distributed mode (§III-C): split the stream, run the three passes per
-    node on its slice, concatenate the edge assignments."""
-    E = src.shape[0]
-    if E == 0:
-        raise ValueError(
-            "clugp_partition_parallel: the edge stream is empty (0 edges); "
-            "there is nothing to partition")
-    bounds = np.linspace(0, E, n_nodes + 1).astype(np.int64)
-    assign = np.zeros(E, dtype=np.int32)
-    rounds = 0
-    clusters = 0
-    last = None
-    for i in range(n_nodes):
-        lo, hi = bounds[i], bounds[i + 1]
-        if hi <= lo:
-            continue
-        sub_cfg = CLUGPConfig(**{**cfg.__dict__})
-        sub = clugp_partition(src[lo:hi], dst[lo:hi], num_vertices, sub_cfg)
-        assign[lo:hi] = sub.assign
-        rounds = max(rounds, sub.game_rounds)
-        clusters += sub.clustering.num_clusters
-        last = sub
-    res = CLUGPResult(assign, last.clustering, last.cluster_graph,
-                      last.cluster_assign, rounds)
-    res.stats = metrics.summarize(src, dst, assign, num_vertices, cfg.k)
-    res.stats["num_clusters"] = clusters
-    res.stats["game_rounds"] = rounds
+    res.stats["backend"] = "np"
+    if cfg.restream:
+        rf_trace.append(res.stats["rf"])
+        res.stats["restream_rf_trace"] = [round(r, 4) for r in rf_trace]
     return res

@@ -53,8 +53,8 @@ def transform_np(src: np.ndarray, dst: np.ndarray,
     return assign
 
 
-def _transform_step(loads, edge, *, lmax: float, k: int):
-    u, v, pu, pv, du, dv, divu, divv = edge
+def _transform_step(loads, edge, *, lmax, k: int):
+    u, v, pu, pv, du, dv, divu, divv, live = edge
     full_u = loads[pu] >= lmax
     full_v = loads[pv] >= lmax
     least = jnp.argmin(loads).astype(jnp.int32)
@@ -66,24 +66,78 @@ def _transform_step(loads, edge, *, lmax: float, k: int):
     normal = jnp.where(same, pu,
                        jnp.where(has_mirror, mirror_choice, degree_choice))
     p = jnp.where(full_u | full_v, overflow_choice, normal).astype(jnp.int32)
-    loads = loads.at[p].add(1)
+    p = jnp.where(live.astype(bool), p, 0)
+    # arithmetic one-hot instead of a scatter: XLA:CPU pays a buffer copy
+    # + kernel call per computed-index scatter inside a loop body, and a
+    # (k,)-wide fused select is far cheaper; padded edges carry no load
+    loads = loads + jnp.where(jnp.arange(k) == p, live, 0)
     return loads, p
 
 
 def transform_jax(src, dst, vertex_part, deg, divided, k: int,
-                  tau: float = 1.0):
-    """lax.scan form of Alg. 1 (used inside the jitted pipeline)."""
+                  tau: float = 1.0, mask=None, lmax=None):
+    """lax.scan form of Alg. 1 (used inside the jitted pipeline).
+
+    ``mask`` marks live edges (the sharded backend pads each device's
+    stream slice to a static length; padded rows get partition 0 and add
+    no load).  ``lmax`` overrides the balance cap — per-device slices use
+    τ·|E_local|/k with the *real* (masked) edge count, which is a traced
+    scalar."""
     E = src.shape[0]
-    lmax = tau * E / float(k)
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    live = (jnp.ones((E,), jnp.int32) if mask is None
+            else jnp.asarray(mask, jnp.int32))
+    if lmax is None:
+        lmax = tau * E / float(k)
     vp = jnp.asarray(vertex_part, jnp.int32)
     edges = jnp.stack([
-        jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+        src, dst,
         vp[src], vp[dst],
         jnp.asarray(deg, jnp.int32)[src], jnp.asarray(deg, jnp.int32)[dst],
         jnp.asarray(divided, jnp.int32)[src],
         jnp.asarray(divided, jnp.int32)[dst],
+        live,
     ], axis=1)
     loads0 = jnp.zeros((k,), dtype=jnp.int32)
     step = lambda s, e: _transform_step(s, e, lmax=lmax, k=k)
     _, assign = jax.lax.scan(step, loads0, edges)
     return assign
+
+
+# ---------------------------------------------------------------------------
+# Restreaming (beyond the paper; Awadelkarim & Ugander's prioritized
+# restreaming): re-consume the stream with the *realized* vertex→partition
+# majority of the previous pass as the prior.  The transform pass then
+# reuses free cuts (divided flags) and reassigns load-aware against fresh
+# load counters — each extra pass measurably cuts RF (EXPERIMENTS.md
+# §Perf-partitioner).
+# ---------------------------------------------------------------------------
+
+def majority_vertex_map_np(src, dst, assign, num_vertices: int,
+                           k: int) -> np.ndarray:
+    """Per vertex, the partition holding most of its edges in the previous
+    pass (ties → lowest partition id, matching jnp.argmax)."""
+    key = (np.concatenate([src, dst]).astype(np.int64) * k
+           + np.tile(assign, 2))
+    cnt = np.bincount(key, minlength=num_vertices * k)
+    return cnt.reshape(num_vertices, k).argmax(axis=1).astype(np.int32)
+
+
+def majority_vertex_map_jax(src, dst, assign, num_vertices: int, k: int,
+                            mask=None, axis: str | None = None):
+    """jit/shard_map form of ``majority_vertex_map_np``.  Under ``axis``
+    each device counts its local slice and the (V, k) tables are psum'd —
+    the restream prior is global even though streams stay device-local."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    if mask is not None:
+        drop = jnp.int32(num_vertices)
+        src = jnp.where(mask, src, drop)
+        dst = jnp.where(mask, dst, drop)
+    cnt = (jnp.zeros((num_vertices, k), jnp.int32)
+           .at[src, assign].add(1, mode="drop")
+           .at[dst, assign].add(1, mode="drop"))
+    if axis is not None:
+        cnt = jax.lax.psum(cnt, axis)
+    return jnp.argmax(cnt, axis=1).astype(jnp.int32)

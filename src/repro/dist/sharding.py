@@ -44,6 +44,13 @@ SINGLE_POD_RULES: dict = {
 
 MULTI_POD_RULES: dict = {**SINGLE_POD_RULES, "batch": ("pod", "data")}
 
+# the partitioner's edge stream: one contiguous stream slice per device
+# along a flat "stream" axis (repro.core.partitioner, paper §III-C)
+PARTITIONER_RULES: dict = {
+    "stream": "stream",
+    "vertex": None,                   # vertex state replicated per node
+}
+
 CP_SERVE_RULES: dict = {
     **SINGLE_POD_RULES,
     "seq": "model",                   # context parallelism

@@ -127,7 +127,12 @@ def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
                  pad_multiple: int = 8) -> PartitionLayout:
     """Vectorized layout builder — pure np.unique/searchsorted/bincount
     passes, no per-vertex Python loops (≥5× the reference builder at 10k
-    vertices; see ``build_layout_reference`` for the retained oracle)."""
+    vertices; see ``build_layout_reference`` for the retained oracle).
+
+    Accepts device-resident (jax) arrays directly: the jit/sharded
+    partitioner backends hand their edge→partition assignment straight in
+    and the single ``np.asarray`` below is the only host transfer — no
+    per-edge host loop ever touches the assignment."""
     E = src.shape[0]
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)

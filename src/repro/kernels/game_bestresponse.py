@@ -28,13 +28,14 @@ from jax.experimental import pallas as pl
 BIG = 3.0e38
 
 
-def _br_kernel(aff_ref, sizes_ref, rowtot_ref, cur_ref, loads_ref,
-               best_ref, cost_ref, *, lam: float, k: int, kpad: int):
+def _br_kernel(aff_ref, sizes_ref, rowtot_ref, cur_ref, loads_ref, lam_ref,
+               best_ref, cost_ref, *, k: int, kpad: int):
     aff = aff_ref[...].astype(jnp.float32)           # (bm, kpad)
     sizes = sizes_ref[...].astype(jnp.float32)       # (bm,)
     rowtot = rowtot_ref[...].astype(jnp.float32)     # (bm,)
     cur = cur_ref[...]                               # (bm,)
     loads = loads_ref[...].astype(jnp.float32)       # (kpad,)
+    lam = lam_ref[0]                                 # (1,) traced scalar
 
     bm = aff.shape[0]
     pids = jax.lax.broadcasted_iota(jnp.int32, (bm, kpad), 1)
@@ -48,19 +49,23 @@ def _br_kernel(aff_ref, sizes_ref, rowtot_ref, cur_ref, loads_ref,
     cost_ref[...] = jnp.min(cost, axis=1)
 
 
-def game_bestresponse(aff, sizes, row_tot, cur, loads, *, lam: float,
+def game_bestresponse(aff, sizes, row_tot, cur, loads, *, lam,
                       k: int | None = None, block_m: int = 256,
                       interpret: bool = True):
     """aff: (M, Kpad) cut mass; sizes/row_tot: (M,); cur: (M,) int32;
     loads: (Kpad,).  ``k`` = real partition count (< Kpad ⇒ padded lanes
-    masked to +BIG).  Returns (best (M,), cost (M,))."""
+    masked to +BIG).  ``lam`` may be a python float or a traced scalar —
+    the jitted partitioner pipeline computes λ_max from the streamed
+    cluster graph, so it is data-dependent and ships to the kernel as a
+    (1,)-shaped input rather than a compile-time constant.
+    Returns (best (M,), cost (M,))."""
     M, kpad = aff.shape
     if k is None:
         k = kpad
     assert M % block_m == 0
     grid = (M // block_m,)
-    kern = functools.partial(_br_kernel, lam=float(lam), k=int(k),
-                             kpad=int(kpad))
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape((1,))
+    kern = functools.partial(_br_kernel, k=int(k), kpad=int(kpad))
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -70,6 +75,7 @@ def game_bestresponse(aff, sizes, row_tot, cur, loads, *, lam: float,
             pl.BlockSpec((block_m,), lambda i: (i,)),
             pl.BlockSpec((block_m,), lambda i: (i,)),
             pl.BlockSpec((kpad,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((block_m,), lambda i: (i,)),
@@ -80,4 +86,4 @@ def game_bestresponse(aff, sizes, row_tot, cur, loads, *, lam: float,
             jax.ShapeDtypeStruct((M,), jnp.float32),
         ],
         interpret=interpret,
-    )(aff, sizes, row_tot, cur, loads)
+    )(aff, sizes, row_tot, cur, loads, lam_arr)

@@ -28,8 +28,8 @@ def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
                   block_kv=block_kv, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("lam", "k", "block_m", "interpret"))
-def game_best_response(aff, sizes, row_tot, cur, loads, lam: float,
+@partial(jax.jit, static_argnames=("k", "block_m", "interpret"))
+def game_best_response(aff, sizes, row_tot, cur, loads, lam,
                        k: int | None = None, block_m: int = 256,
                        interpret: bool = DEFAULT_INTERPRET):
     return _gbr(aff, sizes, row_tot, cur, loads, lam=lam, k=k,

@@ -23,3 +23,9 @@ def make_test_mesh(n_data: int = 2, n_model: int = 4):
 def make_graph_mesh(k: int):
     """The graph engine's mesh: k partitions on one flat axis."""
     return jax.make_mesh((k,), ("parts",))
+
+
+def make_stream_mesh(n: int):
+    """The sharded partitioner's mesh: n stream slices on one flat axis
+    (repro.core.partitioner backend="sharded", paper §III-C)."""
+    return jax.make_mesh((n,), ("stream",))

@@ -4,29 +4,63 @@
 partitions a synthetic web crawl and reports RF / balance / runtime, then
 (optionally) runs distributed PageRank on the result via the shard_map GAS
 engine (--pagerank, needs a mesh with k devices or --simulate).
+
+``--backend {np,jit,sharded}`` picks the partitioner implementation
+(repro.core.partitioner): the host oracle, the single-device fused jit
+pipeline, or the §III-C stream-sharded shard_map pipeline over ``--nodes``
+devices.  ``--restream N`` adds N prioritized-restream passes.  jax must
+see enough devices for the sharded backend, so the arg parse happens
+BEFORE any jax import and sets XLA_FLAGS itself.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 import time
 
-import numpy as np
 
-from repro.core import (CLUGPConfig, baselines, clugp_partition,
-                        clugp_partition_parallel, metrics, random_stream,
-                        web_graph)
-from repro.core.graphgen import social_graph
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=13)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--algo", default="clugp-opt",
+                    choices=["clugp", "clugp-opt", "clugp-parallel",
+                             "hashing", "dbh", "greedy", "hdrf", "mint"])
+    ap.add_argument("--backend", default="np",
+                    choices=["np", "jit", "sharded"],
+                    help="partitioner implementation for clugp algos")
+    ap.add_argument("--nodes", type=int, default=4,
+                    help="stream-split width: sharded mesh size / "
+                         "clugp-parallel node count")
+    ap.add_argument("--restream", type=int, default=0,
+                    help="extra prioritized-restream passes")
+    ap.add_argument("--graph", default="web", choices=["web", "social"])
+    ap.add_argument("--pagerank", action="store_true")
+    ap.add_argument("--exchange", default="halo",
+                    choices=["dense", "halo", "quantized"],
+                    help="mirror-sync wire format for --pagerank")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
 
 
-def partition_with(algo: str, g, k: int, seed: int = 0):
+def partition_with(args, g):
+    import numpy as np
+
+    from repro.core import (CLUGPConfig, baselines, partition,
+                            random_stream)
+
+    algo, k, seed = args.algo, args.k, args.seed
     if algo.startswith("clugp"):
         cfg = (CLUGPConfig.optimized(k) if algo == "clugp-opt"
                else CLUGPConfig.paper(k))
-        res = clugp_partition(g.src, g.dst, g.num_vertices, cfg)
-        return res.assign
-    if algo == "clugp-parallel":
-        res = clugp_partition_parallel(g.src, g.dst, g.num_vertices,
-                                       CLUGPConfig.optimized(k), n_nodes=4)
+        cfg = dataclasses.replace(cfg, restream=args.restream)
+        # --nodes drives the stream split for the sharded backend and for
+        # the legacy clugp-parallel alias (np multi-node combine)
+        nodes = (1 if args.backend == "np" and algo != "clugp-parallel"
+                 else args.nodes)
+        res = partition(g.src, g.dst, g.num_vertices, cfg,
+                        backend=args.backend, nodes=nodes)
         return res.assign
     gr = random_stream(g, seed=seed)
     a = baselines.ALL_BASELINES[algo](gr.src, gr.dst, g.num_vertices, k)
@@ -39,30 +73,40 @@ def partition_with(algo: str, g, k: int, seed: int = 0):
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=int, default=13)
-    ap.add_argument("--k", type=int, default=16)
-    ap.add_argument("--algo", default="clugp-opt",
-                    choices=["clugp", "clugp-opt", "clugp-parallel",
-                             "hashing", "dbh", "greedy", "hdrf", "mint"])
-    ap.add_argument("--graph", default="web", choices=["web", "social"])
-    ap.add_argument("--pagerank", action="store_true")
-    ap.add_argument("--exchange", default="halo",
-                    choices=["dense", "halo", "quantized"],
-                    help="mirror-sync wire format for --pagerank")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = build_parser().parse_args()
+    if args.backend == "sharded":
+        # must land before the first jax import — the device count locks
+        # then.  An existing flag with a smaller count is raised to
+        # --nodes (jax hasn't initialized yet, so overriding is safe).
+        import re
+
+        flags = os.environ.get("XLA_FLAGS", "")
+        m = re.search(r"--xla_force_host_platform_device_count=(\d+)",
+                      flags)
+        if m is None or int(m.group(1)) < args.nodes:
+            flags = re.sub(
+                r"--xla_force_host_platform_device_count=\d+", "", flags)
+            os.environ["XLA_FLAGS"] = (
+                flags +
+                f" --xla_force_host_platform_device_count={args.nodes}")
+
+    import numpy as np
+
+    from repro.core import metrics, web_graph
+    from repro.core.graphgen import social_graph
 
     g = (web_graph(scale=args.scale, seed=args.seed) if args.graph == "web"
          else social_graph(n=1 << args.scale, seed=args.seed))
     print(f"graph: V={g.num_vertices} E={g.num_edges}")
     t0 = time.time()
-    assign = partition_with(args.algo, g, args.k, args.seed)
+    assign = partition_with(args, g)
     dt = time.time() - t0
     rf = metrics.replication_factor(g.src, g.dst, assign, g.num_vertices,
                                     args.k)
     bal = metrics.load_balance(assign, args.k)
-    print(f"{args.algo}: rf={rf:.3f} balance={bal:.3f} "
+    label = args.algo if not args.algo.startswith("clugp") \
+        else f"{args.algo}[{args.backend}, restream={args.restream}]"
+    print(f"{label}: rf={rf:.3f} balance={bal:.3f} "
           f"time={dt:.2f}s ({1e6*dt/g.num_edges:.2f} µs/edge)")
 
     if args.pagerank:
