@@ -14,8 +14,7 @@ from __future__ import annotations
 import sys
 import time
 
-from repro.core import (CLUGPConfig, clugp_partition,
-                        clugp_partition_parallel, metrics, web_graph)
+from repro.core import CLUGPConfig, metrics, partition, web_graph
 from repro.core.graphgen import social_graph
 from .common import quality_row
 
@@ -67,8 +66,8 @@ def fig6_space(scale=12, ks=(16, 64, 256), seed=0):
     V, E = g.num_vertices, g.num_edges
     rows = []
     for k in ks:
-        m_est = clugp_partition(g.src, g.dst, g.num_vertices,
-                                CLUGPConfig(k=k)).stats["num_clusters"]
+        m_est = partition(g.src, g.dst, g.num_vertices,
+                          CLUGPConfig(k=k)).stats["num_clusters"]
         space = {
             "clugp": 8 * V + 8 * V + 8 * m_est,     # clu[] + deg[] + game
             "hashing": 0,
@@ -114,15 +113,15 @@ def fig10_parallelization(scale=12, k=16, seed=0):
     rows = []
     for nodes in (1, 2, 4, 8):
         t0 = time.time()
-        res = clugp_partition_parallel(g.src, g.dst, g.num_vertices,
-                                       CLUGPConfig(k=k), n_nodes=nodes)
+        res = partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=k),
+                        backend="np", nodes=nodes)
         rows.append({"bench": "fig10_nodes", "nodes": nodes, "k": k,
                      "rf": round(res.stats["rf"], 4),
                      "seconds": round(time.time() - t0, 4)})
     for bs in (64, 400, 1600, 6400):
         t0 = time.time()
-        res = clugp_partition(g.src, g.dst, g.num_vertices,
-                              CLUGPConfig(k=k, batch_size=bs))
+        res = partition(g.src, g.dst, g.num_vertices,
+                        CLUGPConfig(k=k, batch_size=bs))
         rows.append({"bench": "fig10_batch", "batch": bs, "k": k,
                      "rf": round(res.stats["rf"], 4),
                      "rounds": res.game_rounds,
@@ -132,18 +131,23 @@ def fig10_parallelization(scale=12, k=16, seed=0):
 
 def fig12_runtime_vs_k(scale=12, ks=(16, 64, 256), seed=0,
                        backends=("np", "jit", "sharded"), nodes=4,
-                       restream=0, repeats=2):
+                       restream=0, repeats=2, unroll=1):
     """Fig. 12 (this repo): partitioner backend runtime vs k — the
-    §III-C headline, the partitioner's own runtime on the mesh.
+    §III-C headline, the partitioner's own runtime on the mesh — driven
+    through the ``GraphSession`` façade (each cell is one serializable
+    session config).
 
     ``edge_us`` is warm time (best of ``repeats`` after one warm-up call
     that pays jit compilation; the np oracle has no compile and is timed
-    directly).  The sharded backend needs ``nodes`` visible devices and
-    is skipped (with a stderr note) when the process has fewer — CI runs
-    under XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    directly).  ``unroll > 1`` adds an extra jit cell with the clustering
+    inner-scan unrolled that much (the ROADMAP headroom knob) so
+    ``trend.py`` tracks its µs/edge next to the unroll=1 baseline.  The
+    sharded backend needs ``nodes`` visible devices and is skipped (with
+    a stderr note) when the process has fewer — CI runs under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8."""
     import jax
 
-    from repro.core import partition
+    from repro.session import GraphSession, SessionConfig
 
     g = web_graph(scale=scale, edge_factor=8, seed=seed)
     # the np oracle runs at BOTH split widths: nodes=1 is the runtime
@@ -153,39 +157,42 @@ def fig12_runtime_vs_k(scale=12, ks=(16, 64, 256), seed=0,
     cells = []
     for backend in backends:
         if backend == "np":
-            cells.append(("np", 1))
+            cells.append(("np", 1, 1))
             if nodes > 1 and "sharded" in backends:
-                cells.append(("np", nodes))
+                cells.append(("np", nodes, 1))
         else:
-            cells.append((backend, nodes if backend == "sharded" else 1))
+            cells.append((backend, nodes if backend == "sharded" else 1, 1))
+    if unroll > 1 and "jit" in backends:
+        cells.append(("jit", 1, unroll))
     rows = []
     for k in ks:
-        cfg = CLUGPConfig(k=k, restream=restream)
         np_us = None
-        for backend, b_nodes in cells:
+        for backend, b_nodes, b_unroll in cells:
             if backend == "sharded" and jax.device_count() < nodes:
                 print(f"fig12: skipping sharded (k={k}) — "
                       f"{jax.device_count()} devices < {nodes} nodes; "
                       f"set XLA_FLAGS=--xla_force_host_platform_"
                       f"device_count={nodes}", file=sys.stderr)
                 continue
+            cfg = CLUGPConfig(k=k, restream=restream, unroll=b_unroll)
+            sess = GraphSession(SessionConfig(clugp=cfg, backend=backend,
+                                              nodes=b_nodes))
             times = []
             if backend != "np":   # warm-up pays compilation
-                partition(g.src, g.dst, g.num_vertices, cfg,
-                          backend=backend, nodes=b_nodes)
+                sess.partition(g.src, g.dst, g.num_vertices)
             # every backend (np included) reports best-of-repeats, so the
             # trend table's never-noise treatment of edge_us stays honest
             for _ in range(repeats):
                 t0 = time.time()
-                res = partition(g.src, g.dst, g.num_vertices, cfg,
-                                backend=backend, nodes=b_nodes)
+                sess.partition(g.src, g.dst, g.num_vertices)
                 times.append(time.time() - t0)
+            res = sess.result
             edge_us = 1e6 * min(times) / g.num_edges
-            if backend == "np" and b_nodes == 1:
+            if (backend, b_nodes) == ("np", 1):
                 np_us = edge_us
             row = {"bench": "fig12_runtime", "algo": "clugp",
                    "backend": backend, "nodes": b_nodes, "k": k,
-                   "restream": restream,
+                   "restream": restream, "unroll": b_unroll,
                    "rf": round(res.stats["rf"], 4),
                    "balance": round(res.stats["balance"], 4),
                    "edge_us": round(edge_us, 3),
@@ -202,14 +209,14 @@ def fig11_weight_and_balance(scale=12, k=16, seed=0):
     g = web_graph(scale=scale, edge_factor=8, seed=seed)
     rows = []
     for tau in (1.0, 1.2, 1.5, 2.0, 3.0):
-        res = clugp_partition(g.src, g.dst, g.num_vertices,
-                              CLUGPConfig(k=k, tau=tau))
+        res = partition(g.src, g.dst, g.num_vertices,
+                        CLUGPConfig(k=k, tau=tau))
         rows.append({"bench": "fig11a_tau", "tau": tau, "k": k,
                      "rf": round(res.stats["rf"], 4),
                      "balance": round(res.stats["balance"], 4)})
     for w in (0.1, 0.3, 0.5, 0.7, 0.9):
-        res = clugp_partition(g.src, g.dst, g.num_vertices,
-                              CLUGPConfig(k=k, relative_weight=w))
+        res = partition(g.src, g.dst, g.num_vertices,
+                        CLUGPConfig(k=k, relative_weight=w))
         rows.append({"bench": "fig11b_weight", "weight": w, "k": k,
                      "rf": round(res.stats["rf"], 4),
                      "balance": round(res.stats["balance"], 4)})
@@ -227,8 +234,13 @@ def _partition_artifact(args) -> int:
         scale, ks, nodes = args.scale, tuple(args.ks), args.nodes
     rows = []
     for restream in (0, args.restream) if args.restream else (0,):
+        # the unroll cell rides the restream=0 sweep only: it is a
+        # lowering knob (bit-identical results), so one µs/edge row per k
+        # is what trend.py needs
         rows += fig12_runtime_vs_k(scale=scale, ks=ks, nodes=nodes,
-                                   restream=restream)
+                                   restream=restream,
+                                   unroll=args.unroll if restream == 0
+                                   else 1)
     results = Path(__file__).resolve().parents[1] / "results"
     results.mkdir(exist_ok=True)
     out = results / "BENCH_partition.json"
@@ -237,22 +249,23 @@ def _partition_artifact(args) -> int:
         print(",".join(f"{k}={v}" for k, v in r.items()))
     print(f"wrote {out} ({len(rows)} rows)")
     if args.check:
-        by_key = {(r["k"], r["restream"], r["backend"], r["nodes"]): r
-                  for r in rows}
+        by_key = {(r["k"], r["restream"], r["backend"], r["nodes"],
+                   r["unroll"]): r for r in rows}
         failures = []
-        for (k, rs, backend, nd), r in by_key.items():
+        for (k, rs, backend, nd, un), r in by_key.items():
             if backend == "np":
                 continue
             # each device backend is judged against the np oracle run at
-            # the SAME split width (the split itself costs RF — Fig. 10)
-            ref = by_key.get((k, rs, "np", nd))
+            # the SAME split width (the split itself costs RF — Fig. 10);
+            # the oracle never unrolls (host loops have no scan)
+            ref = by_key.get((k, rs, "np", nd, 1))
             if ref is None:
                 continue
             if r["rf"] > ref["rf"] * 1.10:
                 failures.append(
-                    f"RF({backend}, k={k}, restream={rs}, nodes={nd}) = "
-                    f"{r['rf']} exceeds 1.10 x RF(np, nodes={nd}) = "
-                    f"{ref['rf']}")
+                    f"RF({backend}, k={k}, restream={rs}, nodes={nd}, "
+                    f"unroll={un}) = {r['rf']} exceeds 1.10 x "
+                    f"RF(np, nodes={nd}) = {ref['rf']}")
         missing = [b for b in ("np", "jit", "sharded")
                    if not any(r["backend"] == b for r in rows)]
         if missing:
@@ -278,6 +291,9 @@ if __name__ == "__main__":
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--restream", type=int, default=1,
                     help="also sweep this restream depth (0 disables)")
+    ap.add_argument("--unroll", type=int, default=2,
+                    help="extra jit cell with the clustering inner scan "
+                         "unrolled this much (1 disables)")
     ap.add_argument("--check", action="store_true",
                     help="fail unless all 3 backends ran and "
                          "RF is within 10%% of the np oracle")

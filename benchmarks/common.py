@@ -5,7 +5,7 @@ import time
 
 import numpy as np
 
-from repro.core import (CLUGPConfig, baselines, clugp_partition, metrics,
+from repro.core import (CLUGPConfig, baselines, metrics, partition,
                         random_stream)
 
 
@@ -21,7 +21,7 @@ def run_partitioner(name: str, g, k: int, seed: int = 0,
             cfg = CLUGPConfig(k=k, split=False)
         if name == "clugp-nogame":
             cfg = CLUGPConfig(k=k, game=False)
-        res = clugp_partition(g.src, g.dst, g.num_vertices, cfg)
+        res = partition(g.src, g.dst, g.num_vertices, cfg)
         return res.assign, time.time() - t0, res
     gr = random_stream(g, seed=seed)
     t0 = time.time()

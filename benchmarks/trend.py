@@ -42,7 +42,12 @@ GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us")
 # match key, never diffed (fig3/fig7 emit one row per k with identical
 # string fields, so k etc. must disambiguate)
 IDENTITY_FIELDS = ("k", "scale", "iters", "seed", "shards", "E", "K",
-                   "n_nodes", "exchange", "nodes", "restream", "backend")
+                   "n_nodes", "exchange", "nodes", "restream", "backend",
+                   "unroll")
+# identity fields added after a baseline was recorded get a default, so
+# pre-existing artifacts (rows without the key) still match their
+# successors instead of degenerating into removed-row/new-row noise
+IDENTITY_DEFAULTS = {"unroll": 1}
 
 
 def find_bench(path: str) -> Path | None:
@@ -64,9 +69,11 @@ def row_key(row: dict) -> tuple:
     # identity numerics + scalar non-numerics; nested structures (e.g. the
     # dryrun rows' per-device collective-byte dicts) are unhashable and
     # not identity, so they stay out of the key
-    return tuple(sorted((k, v) for k, v in row.items()
-                        if k in IDENTITY_FIELDS
-                        or isinstance(v, (str, bool))))
+    items = {k: v for k, v in row.items()
+             if k in IDENTITY_FIELDS or isinstance(v, (str, bool))}
+    for k, default in IDENTITY_DEFAULTS.items():
+        items.setdefault(k, default)
+    return tuple(sorted(items.items()))
 
 
 def numeric_fields(row: dict) -> dict:

@@ -6,21 +6,23 @@ the comm-volume dependence on partition quality (Fig. 8's mechanism).
 """
 import numpy as np
 
-from repro.core import (CLUGPConfig, baselines, clugp_partition,
-                        random_stream, web_graph)
-from repro.graph import (build_layout, reference_cc, reference_pagerank,
-                         simulate_cc, simulate_pagerank)
+from repro.core import CLUGPConfig, baselines, random_stream, web_graph
+from repro.graph import reference_cc, reference_pagerank, simulate_cc, \
+    simulate_pagerank
+from repro.session import GraphSession
 
 K = 8
 g = web_graph(scale=11, edge_factor=8, seed=2)
 print(f"web graph: |V|={g.num_vertices} |E|={g.num_edges}, k={K}")
 
-res = clugp_partition(g.src, g.dst, g.num_vertices, CLUGPConfig.optimized(K))
-lay_clugp = build_layout(g.src, g.dst, res.assign, g.num_vertices, K)
+sess = GraphSession(CLUGPConfig.optimized(K))
+sess.partition(g.src, g.dst, g.num_vertices)
+lay_clugp = sess.partition_layout
 
 gr = random_stream(g, seed=1)
 h = baselines.hashing(gr.src, gr.dst, g.num_vertices, K)
-lay_hash = build_layout(gr.src, gr.dst, h, g.num_vertices, K)
+lay_hash = GraphSession(CLUGPConfig(k=K)).with_partition(
+    gr.src, gr.dst, g.num_vertices, h).partition_layout
 
 print(f"{'partitioner':10s} {'mirrors':>9s} {'ideal MB/it':>12s} "
       f"{'quant MB/it':>12s} {'halo MB/it':>11s} {'dense MB/it':>12s}")

@@ -1,15 +1,15 @@
 """Compare all partitioners across k — a minified Fig. 3/7, plus the
-per-iteration GAS wire cost each partition would pay on the engine's two
-exchange backends (dense padded all_gather vs mirror-routed halo
-all_to_all) next to the ragged ideal.
+per-iteration GAS wire cost each partition would pay on the engine's
+exchange backends, via the session façade: CLUGP algos run
+``GraphSession.partition``, baselines adopt their assignment with
+``with_partition``, and the comm table is ``session.comm_bytes()`` either
+way.
 
     PYTHONPATH=src:. python examples/partition_compare.py
 """
-import numpy as np
-
 from benchmarks.common import quality_row, run_partitioner, stream_for
-from repro.core import web_graph
-from repro.graph import build_layout
+from repro.core import CLUGPConfig, web_graph
+from repro.session import GraphSession, SessionConfig
 
 g = web_graph(scale=12, edge_factor=8, seed=0)
 print(f"web graph: |V|={g.num_vertices} |E|={g.num_edges}")
@@ -21,10 +21,11 @@ for k in (4, 16, 64):
         out = run_partitioner(algo, g, k, 0)
         r = quality_row(algo, g, k, out=out)
         src, dst = stream_for(algo, g, out)
-        lay = build_layout(np.asarray(src), np.asarray(dst), out[0],
-                           g.num_vertices, k)
+        sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=k)))
+        sess.with_partition(src, dst, g.num_vertices, out[0])
+        cb = sess.comm_bytes()
         print(f"{r['algo']:12s} {r['k']:>4d} {r['rf']:>8.3f} "
               f"{r['balance']:>8.3f} {r['us_per_edge']:>9.2f} "
-              f"{lay.comm_bytes_mirror_sync()/1e3:>12.1f} "
-              f"{lay.comm_bytes_halo()/1e3:>11.1f} "
-              f"{lay.comm_bytes_ideal()/1e3:>12.1f}")
+              f"{cb['dense_gather']/1e3:>12.1f} "
+              f"{cb['halo']/1e3:>11.1f} "
+              f"{cb['ideal']/1e3:>12.1f}")

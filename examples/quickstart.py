@@ -1,27 +1,34 @@
-"""Quickstart: partition a synthetic web crawl with CLUGP (paper-faithful
-and optimized profiles), compare against HDRF/hashing, and run distributed
-PageRank on the result.
+"""Quickstart: the GraphSession façade — partition a synthetic web crawl
+with CLUGP, build the vertex-cut layout, and run distributed PageRank and
+connected components, all from one serializable session config.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Under XLA_FLAGS=--xla_force_host_platform_device_count=8 (what CI's
+examples-smoke job sets) the GAS programs also run as real shard_map
+collectives, one partition per virtual device.
 """
 import numpy as np
 
-from repro.core import (CLUGPConfig, baselines, clugp_partition, metrics,
-                        random_stream, web_graph)
-from repro.graph import build_layout, reference_pagerank, simulate_pagerank
+import jax
 
-K = 16
+from repro.core import CLUGPConfig, baselines, metrics, random_stream, web_graph
+from repro.graph import reference_cc, reference_pagerank
+from repro.launch.mesh import make_graph_mesh
+from repro.session import GraphSession, SessionConfig
+
+K = 8
 
 g = web_graph(scale=12, edge_factor=8, seed=0)
 print(f"web graph: |V|={g.num_vertices} |E|={g.num_edges}")
 
 for name, cfg in [("CLUGP (paper)", CLUGPConfig.paper(K)),
                   ("CLUGP (optimized)", CLUGPConfig.optimized(K))]:
-    res = clugp_partition(g.src, g.dst, g.num_vertices, cfg)
-    print(f"{name:20s} RF={res.stats['rf']:.3f} "
-          f"balance={res.stats['balance']:.3f} "
-          f"clusters={res.stats['num_clusters']} "
-          f"game_rounds={res.stats['game_rounds']}")
+    sess = GraphSession(cfg).partition(g.src, g.dst, g.num_vertices)
+    print(f"{name:20s} RF={sess.stats['rf']:.3f} "
+          f"balance={sess.stats['balance']:.3f} "
+          f"clusters={sess.stats['num_clusters']} "
+          f"game_rounds={sess.stats['game_rounds']}")
 
 gr = random_stream(g, seed=1)
 for name in ("hdrf", "hashing"):
@@ -30,12 +37,29 @@ for name in ("hdrf", "hashing"):
     print(f"{name:20s} RF={rf:.3f} "
           f"balance={metrics.load_balance(a, K):.3f}")
 
-# distributed PageRank on the optimized partition (simulated k-device GAS)
-res = clugp_partition(g.src, g.dst, g.num_vertices, CLUGPConfig.optimized(K))
-lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, K)
-pr = simulate_pagerank(lay, iters=30)
+# the whole pipeline as ONE object — and the config round-trips through
+# JSON, so this exact run is reproducible from a blob
+sess = GraphSession(SessionConfig(clugp=CLUGPConfig.optimized(K),
+                                  backend="jit", exchange="quantized"))
+sess = GraphSession.from_json(sess.to_json())
+sess.partition(g.src, g.dst, g.num_vertices).layout()
+
+# with >= K devices the programs shard_map one partition per device;
+# otherwise the stacked simulator runs the same per-device math
+mesh = make_graph_mesh(K) if jax.device_count() >= K else None
+where = f"shard_map over {K} devices" if mesh else "stacked simulation"
+pr = sess.run("pagerank", iters=30, mesh=mesh)
 ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
-print(f"pagerank max|err| vs single-machine oracle: "
+print(f"pagerank ({where}): max|err| vs single-machine oracle = "
       f"{np.abs(pr - ref).max():.2e}")
-print(f"mirror-sync comm/iter: {lay.comm_bytes_ideal()/1e6:.2f} MB "
-      f"(dense baseline {lay.comm_bytes_dense()/1e6:.2f} MB)")
+cc = sess.run("cc", iters=40, mesh=mesh)
+rcc = reference_cc(g.src, g.dst, g.num_vertices)
+print(f"cc ({where}): label match vs oracle = {np.mean(cc == rcc)*100:.1f}%")
+
+cb = sess.comm_bytes()
+print("mirror-sync comm/iter: "
+      f"quantized={cb['quantized']/1e6:.2f} MB "
+      f"halo={cb['halo']/1e6:.2f} MB "
+      f"dense-gather={cb['dense_gather']/1e6:.2f} MB "
+      f"(ragged ideal {cb['ideal']/1e6:.2f} MB, "
+      f"allreduce baseline {cb['allreduce']/1e6:.2f} MB)")

@@ -9,6 +9,9 @@ from .game import (contract, best_response_rounds, greedy_assign,  # noqa: F401
 from .transform import (transform_np, transform_jax,  # noqa: F401
                         majority_vertex_map_np, majority_vertex_map_jax)
 from .pipeline import CLUGPConfig, CLUGPResult, clugp_partition  # noqa: F401
+from .stages import (StageCtx, StageSet, PipelineOut,  # noqa: F401
+                     run_clugp_body, restream_loop,
+                     HOST_STAGES, JAX_STAGES)
 from .partitioner import (BACKENDS, partition,  # noqa: F401
                           clugp_partition_parallel)
 from . import baselines, metrics, theory  # noqa: F401

@@ -301,7 +301,7 @@ _BIG_ID = np.int32(2 ** 31 - 1)
 
 def _block_step(carry, x, *, vmax: float, allow_split: bool,
                 split_degree_factor: float, cap: int, num_vertices: int,
-                B: int):
+                B: int, unroll: int = 1):
     """Process one block of B edges: localize → inner scan → write back."""
     clu, deg, vol, nid, seen_v, seen_deg = carry
     bu, bv = x
@@ -340,8 +340,12 @@ def _block_step(carry, x, *, vmax: float, allow_split: bool,
                     split_degree_factor=split_degree_factor, B=B)
     live = (bu != bv).astype(jnp.int32)
     ints = jnp.stack([lu, lv_, live], axis=1)   # one slice per step
+    # ``unroll`` replicates the per-edge transition body (2-edge unroll =
+    # the ROADMAP headroom knob): XLA sees consecutive edges' fused
+    # scatters back to back and can coalesce their buffer traffic.  Pure
+    # lowering choice — the transition semantics are bit-identical.
     (buf, nid, _, seen_v, seen_deg), fires = jax.lax.scan(
-        inner, (buf, nid, nid0, seen_v, seen_deg), ints)
+        inner, (buf, nid, nid0, seen_v, seen_deg), ints, unroll=unroll)
     lclu, ldeg, lvol = buf[:2 * B], buf[2 * B:4 * B], buf[4 * B:]
 
     # write back: vertex → global cluster id (fresh slots map to the ids
@@ -365,7 +369,7 @@ def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
                              allow_split: bool = True,
                              split_degree_factor: float = 0.0,
                              id_cap: int | None = None,
-                             block_size: int = 128):
+                             block_size: int = 128, unroll: int = 1):
     """Blocked lax.scan form; returns raw (non-compacted) labels + state
     arrays (clu, deg, divided, replicas, next_id) — bit-identical to
     ``streaming_clustering_np``.
@@ -376,6 +380,9 @@ def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
     pass a tight guess and re-run with a doubled cap iff the returned
     ``next_id`` hits it — an overflowed run clips fresh ids into the
     scrap slot, so its labels are invalid but the overflow is detectable.
+
+    ``unroll`` unrolls the inner per-edge scan by that many edges
+    (``CLUGPConfig.unroll``); results are bit-identical at any setting.
     """
     E = src.shape[0]
     cap = int(id_cap) if id_cap is not None else num_vertices + 2 * E + 2
@@ -398,7 +405,8 @@ def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
     step = partial(_block_step, vmax=jnp.float32(vmax),
                    allow_split=allow_split,
                    split_degree_factor=float(split_degree_factor),
-                   cap=cap, num_vertices=num_vertices, B=B)
+                   cap=cap, num_vertices=num_vertices, B=B,
+                   unroll=int(unroll))
     (clu, deg, _, next_id, _, _), fires = jax.lax.scan(step, carry, xs)
     fires = fires.reshape(-1)[:E]
     fire_u = (fires & 1) > 0

@@ -1,58 +1,55 @@
-"""Backend-parametric CLUGP partitioner — the pipeline itself on the mesh.
+"""Backend-parametric CLUGP partitioner — thin strategies over ONE body.
 
 The paper's §III-C scalability claim is about the *partitioner's own
 runtime*: the three passes parallelize across nodes and restreaming
-recovers the quality one-pass streaming leaves behind.  This module turns
-``repro.core`` from a host-side reference into a mesh-resident subsystem:
+recovers the quality one-pass streaming leaves behind.  The pass sequence
+itself lives in ``repro.core.stages.run_clugp_body``; this module holds
+the public API and the per-backend strategy wrappers:
 
     partition(src, dst, num_vertices, cfg, backend=..., nodes=..., mesh=...)
 
 Three backends share one ``CLUGPConfig`` and one ``CLUGPResult``:
 
-- ``"np"``      — the interpreted host path (``clugp_partition``), kept as
-                  the equivalence oracle.  With ``nodes > 1`` it is the
-                  host reference of the sharded combine: the stream splits
-                  into contiguous slices, each slice runs the three passes
-                  in a private cluster-id space, and the per-slice edge
-                  assignments concatenate (paper §III-C "combine partial
-                  partitioning results").
-- ``"jit"``     — single-device fused pipeline: ``lax.scan`` clustering →
-                  in-graph label compaction + contraction → batched
-                  best-response rounds (Pallas ``game_bestresponse``
-                  kernel or the identical XLA fallback) →
-                  ``transform_jax`` — all under ONE jit, so the host never
-                  touches per-edge state.
-- ``"sharded"`` — true §III-C: the edge stream shards over a ``stream``
-                  mesh axis (shard_map, specs resolved through
-                  ``repro.dist.sharding`` rule tables).  Each device
-                  clusters its slice in a private id space and contracts
-                  locally; the game plays every device as one §V-D batch
-                  against a psum'd global load vector; the transform runs
-                  per device with its slice's balance cap; restream priors
-                  are psum'd (V, k) majority tables.
+- ``"np"``      — the interpreted host path (``HOST_STAGES`` adapters),
+                  kept as the equivalence oracle.  With ``nodes > 1`` it
+                  is the host reference of the sharded combine: the
+                  stream splits into contiguous slices, each slice runs
+                  the body in a private cluster-id space, and the
+                  per-slice edge assignments concatenate (paper §III-C
+                  "combine partial partitioning results").
+- ``"jit"``     — single-device fused pipeline: the body under ONE jit
+                  with ``JAX_STAGES`` (blocked clustering scan →
+                  in-graph contraction → game → transform scan), so the
+                  host never touches per-edge state.
+- ``"sharded"`` — true §III-C: the SAME body with the SAME ``JAX_STAGES``
+                  runs per device inside shard_map over a ``stream`` mesh
+                  axis (specs resolved through ``repro.dist.sharding``
+                  rule tables); the only difference is the ctx — mask,
+                  ``axis="stream"``, traced per-slice vmax, per-slice
+                  balance cap.
 
 ``cfg.restream`` adds that many prioritized-restream passes on every
-backend (Awadelkarim & Ugander): re-consume the stream with the previous
-pass's realized vertex→partition majority as the prior.  Measured effect
-in EXPERIMENTS.md §Perf-partitioner.
+backend (Awadelkarim & Ugander).  Measured effect in EXPERIMENTS.md
+§Perf-partitioner.  The one-object façade over partition → layout → GAS
+is ``repro.session.GraphSession``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import lru_cache, partial
+from typing import NamedTuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from .clustering import (ClusteringResult, compact_labels_jax, default_vmax,
-                         streaming_clustering_jax)
-from .game import (contract, jax_cluster_csr, jax_game_rounds,
-                   jax_game_rounds_gs, jax_greedy_assign)
-from .pipeline import CLUGPConfig, CLUGPResult, clugp_partition
-from .transform import (majority_vertex_map_jax, majority_vertex_map_np,
-                        transform_jax, transform_np)
+from .clustering import ClusteringResult, default_vmax
+from .game import contract
+from .pipeline import CLUGPConfig, CLUGPResult
+from .stages import (HOST_STAGES, JAX_STAGES, StageCtx, resolve_game_mode,
+                     restream_loop, run_clugp_body)
 from . import metrics
 
 BACKENDS = ("np", "jit", "sharded")
@@ -64,20 +61,6 @@ def _check_stream(src: np.ndarray) -> None:
         raise ValueError(
             "partition: the edge stream is empty (0 edges); there is "
             "nothing to partition")
-
-
-def _game_mode(kernel: str) -> str:
-    """Resolve the game sweep implementation.  ``scan`` = Gauss–Seidel
-    over clusters (the CPU-fast host-exact form), ``pallas`` / ``xla`` =
-    batched-Jacobi rounds on the ``game_bestresponse`` kernel / its XLA
-    fallback (the MXU-shaped form).  ``auto`` picks pallas on TPU and the
-    scan everywhere else."""
-    if kernel not in ("auto", "scan", "pallas", "xla"):
-        raise ValueError(f"unknown game kernel {kernel!r}; expected "
-                         "'auto', 'scan', 'pallas' or 'xla'")
-    if kernel == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "scan"
-    return kernel
 
 
 def _pad_to(n: int, mult: int) -> int:
@@ -99,27 +82,60 @@ def partition(src: np.ndarray, dst: np.ndarray, num_vertices: int,
     _check_stream(src)
     if backend == "np":
         if nodes <= 1:
-            return clugp_partition(src, dst, num_vertices, cfg)
-        return _partition_np_nodes(src, dst, num_vertices, cfg, nodes)
+            return _run_np(src, dst, num_vertices, cfg)
+        return _run_np_nodes(src, dst, num_vertices, cfg, nodes)
     if backend == "jit":
-        return _partition_jit(src, dst, num_vertices, cfg)
-    return _partition_sharded(src, dst, num_vertices, cfg, nodes, mesh)
+        return _run_jit(src, dst, num_vertices, cfg)
+    return _run_sharded(src, dst, num_vertices, cfg, nodes, mesh)
 
 
 def clugp_partition_parallel(src: np.ndarray, dst: np.ndarray,
                              num_vertices: int, cfg: CLUGPConfig,
                              n_nodes: int = 4) -> CLUGPResult:
-    """Compatibility alias for the §III-C host combine — the old
-    fake-parallel loop in ``pipeline.py`` is gone; this is
-    ``partition(backend="np", nodes=n_nodes)``."""
+    """Deprecated shim for the §III-C host combine — delegates to the
+    stage body via ``partition(backend="np", nodes=n_nodes)``."""
+    warnings.warn(
+        "clugp_partition_parallel is deprecated; use repro.core.partition"
+        "(..., backend='np', nodes=n) or repro.session.GraphSession",
+        DeprecationWarning, stacklevel=2)
     return partition(src, dst, num_vertices, cfg, backend="np",
                      nodes=n_nodes)
 
 
-# --------------------------------------------------------------- np combine
+# ------------------------------------------------------------- np strategy
 
-def _partition_np_nodes(src: np.ndarray, dst: np.ndarray, num_vertices: int,
-                        cfg: CLUGPConfig, nodes: int) -> CLUGPResult:
+def _resolve_vmax(cfg: CLUGPConfig, num_edges: int) -> float:
+    """The §VI-A default cap over the edges the strategy actually
+    streams — the slice count for host-combine nodes, |E| otherwise (the
+    sharded node_fn derives the same rule from its traced mask count)."""
+    return cfg.vmax if cfg.vmax is not None else default_vmax(num_edges,
+                                                              cfg.k)
+
+
+def _host_ctx(num_vertices: int, num_edges: int, cfg: CLUGPConfig
+              ) -> StageCtx:
+    return StageCtx(num_vertices=num_vertices,
+                    vmax=_resolve_vmax(cfg, num_edges))
+
+
+def _run_np(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+            cfg: CLUGPConfig) -> CLUGPResult:
+    ctx = _host_ctx(num_vertices, src.shape[0], cfg)
+    out = run_clugp_body(src, dst, ctx, cfg, HOST_STAGES)
+    res = CLUGPResult(out.assign, out.cluster, out.graph.cg,
+                      out.cluster_assign, out.rounds)
+    res.stats = metrics.summarize(src, dst, out.assign, num_vertices, cfg.k)
+    res.stats["num_clusters"] = out.cluster.num_clusters
+    res.stats["game_rounds"] = out.rounds
+    res.stats["backend"] = "np"
+    if cfg.restream:
+        trace = list(out.trace) + [res.stats["rf"]]
+        res.stats["restream_rf_trace"] = [round(r, 4) for r in trace]
+    return res
+
+
+def _run_np_nodes(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+                  cfg: CLUGPConfig, nodes: int) -> CLUGPResult:
     """Host reference of the sharded combine: contiguous ceil(E/n) slices
     (the same chunking shard_map uses), private id spaces per node,
     concatenated edge assignments, then *global* restream passes whose
@@ -132,29 +148,27 @@ def _partition_np_nodes(src: np.ndarray, dst: np.ndarray, num_vertices: int,
     E = src.shape[0]
     e_per = -(-E // nodes)
     sub_cfg = dataclasses.replace(cfg, restream=0)
-    assign = np.zeros(E, dtype=np.int32)
-    per_node = []
-    slices = []
+    parts, per_node, pieces = [], [], []
     rounds = 0
     clusters = 0
     for i in range(nodes):
         lo, hi = i * e_per, min(E, (i + 1) * e_per)
         if hi <= lo:
             continue
-        sub = clugp_partition(src[lo:hi], dst[lo:hi], num_vertices, sub_cfg)
-        assign[lo:hi] = sub.assign
-        rounds = max(rounds, sub.game_rounds)
-        clusters += sub.clustering.num_clusters
+        ctx = _host_ctx(num_vertices, hi - lo, sub_cfg)
+        out = run_clugp_body(src[lo:hi], dst[lo:hi], ctx, sub_cfg,
+                             HOST_STAGES)
+        pieces.append(out.assign)
+        rounds = max(rounds, out.rounds)
+        clusters += out.cluster.num_clusters
         per_node.append({"node": i, "edges": int(hi - lo),
-                         "clusters": sub.clustering.num_clusters,
-                         "game_rounds": sub.game_rounds})
-        slices.append((lo, hi, sub.clustering))
-    for _ in range(cfg.restream):
-        vp = majority_vertex_map_np(src, dst, assign, num_vertices, cfg.k)
-        for lo, hi, clus in slices:
-            assign[lo:hi] = transform_np(src[lo:hi], dst[lo:hi], vp,
-                                         clus.deg, clus.divided,
-                                         cfg.k, cfg.tau)
+                         "clusters": out.cluster.num_clusters,
+                         "game_rounds": out.rounds})
+        parts.append((slice(lo, hi), out.cluster, ctx))
+    assign = np.concatenate(pieces)
+    gctx = StageCtx(num_vertices=num_vertices, vmax=None)
+    assign, trace = restream_loop(src, dst, assign, parts, gctx, cfg,
+                                  HOST_STAGES)
     res = CLUGPResult(assign, None, None, None, rounds)
     res.stats = metrics.summarize(src, dst, assign, num_vertices, cfg.k)
     res.stats["num_clusters"] = clusters   # sum over private id spaces
@@ -162,96 +176,18 @@ def _partition_np_nodes(src: np.ndarray, dst: np.ndarray, num_vertices: int,
     res.stats["backend"] = "np"
     res.stats["nodes"] = nodes
     res.stats["per_node"] = per_node
+    if cfg.restream:
+        res.stats["restream_rf_trace"] = [
+            round(r, 4) for r in list(trace) + [res.stats["rf"]]]
     return res
 
 
-# --------------------------------------------------------------- jit backend
+# ----------------------------------------------------------- adaptive caps
 
-def _cluster_graph_arrays(src, dst, compact, m_cap: int, effective: bool,
-                          mask=None):
-    """Contract the streamed graph against compacted labels, all in-graph:
-    per-cluster intra sizes, boundary row totals, and the cross-edge
-    cluster endpoints (padded with the drop sentinel ``m_cap``).
-
-    Matches ``contract`` exactly: self-loop edges of clustered vertices
-    COUNT toward their cluster's intra size (cs == cd); ``mask`` excludes
-    the sharded backend's padding lanes, which are fake self-loops."""
-    cs, cd = compact[src], compact[dst]
-    ok = (cs >= 0) & (cd >= 0)
-    if mask is not None:
-        ok = ok & mask
-    sent = jnp.int32(m_cap)
-    intra = ok & (cs == cd)
-    cross = ok & (cs != cd)
-    sizes = jnp.zeros((m_cap,), jnp.float32).at[
-        jnp.where(intra, cs, sent)].add(1.0, mode="drop")
-    xs = jnp.where(cross, cs, sent)
-    xd = jnp.where(cross, cd, sent)
-    row_tot = (jnp.zeros((m_cap,), jnp.float32)
-               .at[xs].add(1.0, mode="drop")
-               .at[xd].add(1.0, mode="drop"))
-    game_sizes = sizes + row_tot if effective else sizes
-    n_cross = cross.sum().astype(jnp.float32)
-    return game_sizes, row_tot, xs, xd, n_cross
-
-
-def _lambda_jax(total, n_cross, k: int, relative_weight):
-    """λ_max (Thm 5) / relative-weight λ from traced cluster-graph totals
-    (Σ game sizes, #cross edges) — matches ``lambda_max``/
-    ``lambda_from_weight`` (adj.sum()/2 == n_cross)."""
-    lam_max = jnp.where(total > 0,
-                        (k * k) * n_cross / jnp.maximum(total * total, 1.0),
-                        1.0)
-    if relative_weight is None:
-        return lam_max
-    w = min(max(relative_weight, 1e-3), 1 - 1e-3)
-    lam = lam_max * (w / (1 - w))
-    return jnp.where((total > 0) & (n_cross > 0), lam, 1.0)
-
-
-@partial(jax.jit, static_argnames=(
-    "num_vertices", "k", "vmax", "tau", "allow_split", "split_degree_factor",
-    "batch_size", "max_rounds", "seed", "game", "effective_sizes",
-    "relative_weight", "restream", "game_mode", "id_cap", "m_cap",
-    "nnz_cap"))
-def _jit_pipeline(src, dst, *, num_vertices: int, k: int, vmax: float,
-                  tau: float, allow_split: bool, split_degree_factor: float,
-                  batch_size: int, max_rounds: int, seed: int, game: bool,
-                  effective_sizes: bool, relative_weight, restream: int,
-                  game_mode: str, id_cap: int, m_cap: int, nnz_cap: int):
-    """The whole three-pass pipeline (+ restreams) under one jit — the
-    host sees only the final arrays, never per-edge state."""
-    clu_raw, deg, divided, replicas, next_id = streaming_clustering_jax(
-        src, dst, num_vertices, vmax, allow_split=allow_split,
-        split_degree_factor=split_degree_factor, id_cap=id_cap)
-    compact, m = compact_labels_jax(clu_raw, id_cap)
-    game_sizes, row_tot, xs, xd, n_cross = _cluster_graph_arrays(
-        src, dst, compact, m_cap, effective_sizes)
-    overflow = jnp.bool_(False)
-    if game_mode == "scan" and m_cap * (m_cap + 1) >= 2 ** 31:
-        game_mode = "xla"    # GS pair keys overflow int32 above ~46k
-    if game:
-        lam = _lambda_jax(game_sizes.sum(), n_cross, k, relative_weight)
-        if game_mode == "scan":
-            row, col, w, overflow = jax_cluster_csr(xs, xd, m_cap, nnz_cap)
-            cluster_assign, rounds = jax_game_rounds_gs(
-                row, col, w, game_sizes, row_tot, k, lam,
-                max_rounds=max_rounds, seed=seed)
-        else:
-            cluster_assign, rounds = jax_game_rounds(
-                xs, xd, game_sizes, row_tot, k, lam,
-                batch_size=batch_size, max_rounds=max_rounds, seed=seed,
-                use_pallas=game_mode == "pallas")
-    else:
-        cluster_assign = jax_greedy_assign(game_sizes, k)
-        rounds = jnp.int32(0)
-    vertex_part = cluster_assign[jnp.clip(compact, 0, m_cap - 1)]
-    assign = transform_jax(src, dst, vertex_part, deg, divided, k, tau)
-    for _ in range(restream):
-        vp = majority_vertex_map_jax(src, dst, assign, num_vertices, k)
-        assign = transform_jax(src, dst, vp, deg, divided, k, tau)
-    return (assign, compact, deg, divided, replicas, m, rounds,
-            cluster_assign, overflow, next_id)
+class Caps(NamedTuple):
+    id_cap: int
+    m_cap: int
+    nnz_cap: int
 
 
 def _id_cap_guess(num_vertices: int, num_edges: int) -> int:
@@ -271,35 +207,63 @@ def _m_cap_guess(num_vertices: int) -> int:
                    _BLOCK)
 
 
-def _partition_jit(src: np.ndarray, dst: np.ndarray, num_vertices: int,
-                   cfg: CLUGPConfig) -> CLUGPResult:
-    E = src.shape[0]
-    vmax = cfg.vmax if cfg.vmax is not None else default_vmax(E, cfg.k)
-    id_cap = _id_cap_guess(num_vertices, E)
+def _init_caps(num_vertices: int, e_per: int) -> Caps:
     m_cap = _m_cap_guess(num_vertices)
-    nnz_cap = 8 * m_cap
+    return Caps(_id_cap_guess(num_vertices, e_per), m_cap, 8 * m_cap)
+
+
+def _grow_caps(caps: Caps, *, next_id: int, m: int, overflow: bool,
+               num_vertices: int, e_per: int) -> tuple:
+    """One retry step of the adaptive caps shared by the device
+    strategies: double whichever cap the run overflowed (bounded by its
+    worst case) and report whether the run was already clean."""
+    id_cap, m_cap, nnz_cap = caps
+    ok = True
+    if next_id > id_cap - 2:
+        id_cap = min(2 * id_cap, num_vertices + 2 * e_per + 2)
+        ok = False
+    if m > m_cap:
+        m_cap = min(2 * m_cap, _pad_to(num_vertices, _BLOCK))
+        ok = False
+    if overflow:
+        nnz_cap = min(2 * nnz_cap, m_cap * m_cap)
+        ok = False
+    return Caps(id_cap, m_cap, nnz_cap), ok
+
+
+# ------------------------------------------------------------ jit strategy
+
+@partial(jax.jit, static_argnames=("num_vertices", "cfg", "vmax",
+                                   "game_mode", "id_cap", "m_cap",
+                                   "nnz_cap"))
+def _jit_body(src, dst, *, num_vertices: int, cfg: CLUGPConfig, vmax: float,
+              game_mode: str, id_cap: int, m_cap: int, nnz_cap: int):
+    """The whole stage body (+ restreams) under one jit — the host sees
+    only the final arrays, never per-edge state."""
+    ctx = StageCtx(num_vertices=num_vertices, vmax=vmax,
+                   game_mode=game_mode, id_cap=id_cap, m_cap=m_cap,
+                   nnz_cap=nnz_cap)
+    out = run_clugp_body(src, dst, ctx, cfg, JAX_STAGES)
+    return (out.assign, out.cluster.compact, out.cluster.deg,
+            out.cluster.divided, out.cluster.replicas, out.cluster.m,
+            out.rounds, out.cluster_assign, out.overflow,
+            out.cluster.next_id)
+
+
+def _run_jit(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+             cfg: CLUGPConfig) -> CLUGPResult:
+    E = src.shape[0]
+    vmax = _resolve_vmax(cfg, E)
+    caps = _init_caps(num_vertices, E)
     while True:
-        out = _jit_pipeline(
+        out = _jit_body(
             jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
-            num_vertices=num_vertices, k=cfg.k, vmax=float(vmax),
-            tau=cfg.tau, allow_split=cfg.split,
-            split_degree_factor=cfg.split_degree_factor,
-            batch_size=cfg.batch_size, max_rounds=cfg.max_rounds,
-            seed=cfg.seed, game=cfg.game,
-            effective_sizes=cfg.effective_sizes,
-            relative_weight=cfg.relative_weight, restream=cfg.restream,
-            game_mode=_game_mode(cfg.kernel), id_cap=id_cap, m_cap=m_cap,
-            nnz_cap=nnz_cap)
-        ok = True
-        if int(out[-1]) > id_cap - 2:
-            id_cap = min(2 * id_cap, num_vertices + 2 * E + 2)
-            ok = False
-        if int(out[5]) > m_cap:
-            m_cap = min(2 * m_cap, _pad_to(num_vertices, _BLOCK))
-            ok = False
-        if bool(out[-2]):
-            nnz_cap = min(2 * nnz_cap, m_cap * m_cap)
-            ok = False
+            num_vertices=num_vertices, cfg=cfg, vmax=float(vmax),
+            game_mode=resolve_game_mode(cfg.kernel, caps.m_cap),
+            id_cap=caps.id_cap, m_cap=caps.m_cap, nnz_cap=caps.nnz_cap)
+        caps, ok = _grow_caps(caps, next_id=int(out[-1]), m=int(out[5]),
+                              overflow=bool(out[-2]),
+                              num_vertices=num_vertices, e_per=E)
         if ok:
             break
     assign, compact, deg, divided, replicas, m, rounds, cluster_assign = (
@@ -327,22 +291,17 @@ def _stream_spec(mesh, shape: tuple):
 
 
 @lru_cache(maxsize=32)
-def _make_sharded_fn(mesh, e_per: int, num_vertices: int, k: int,
-                     vmax_opt, tau: float, allow_split: bool,
-                     split_degree_factor: float, batch_size: int,
-                     max_rounds: int, seed: int, game: bool,
-                     effective_sizes: bool, relative_weight,
-                     restream: int, game_mode: str, id_cap: int,
+def _make_sharded_fn(mesh, e_per: int, num_vertices: int,
+                     cfg: CLUGPConfig, game_mode: str, id_cap: int,
                      m_cap: int, nnz_cap: int):
-    """Build (and cache, keyed by mesh + statics) the jitted shard_map
-    pipeline: one stream slice per device along the ``stream`` axis."""
+    """Build (and cache, keyed by mesh + the frozen cfg + caps) the jitted
+    shard_map pipeline: one stream slice per device along the ``stream``
+    axis, each running the SAME stage body as the jit strategy — only the
+    ctx differs."""
     from ..dist._compat import shard_map
 
     n = mesh.shape["stream"]
     spec = _stream_spec(mesh, (n * e_per,))
-    axis = "stream"
-    if game_mode == "scan" and m_cap * (m_cap + 1) >= 2 ** 31:
-        game_mode = "xla"    # GS pair keys overflow int32 above ~46k
 
     def node_fn(src_b, dst_b, mask_b):
         # padded lanes become self-loops: the clustering scan freezes on
@@ -354,48 +313,18 @@ def _make_sharded_fn(mesh, e_per: int, num_vertices: int, k: int,
         # own cap from its sub-stream, exactly like the np combine (a
         # global-|E| cap grows node-local clusters 4× too fat at n=4 and
         # costs ~40% RF)
-        vmax = (jnp.maximum(2.0, e_real / k) if vmax_opt is None
-                else jnp.float32(vmax_opt))
-        clu_raw, deg, divided, _, next_id = streaming_clustering_jax(
-            s, d, num_vertices, vmax, allow_split=allow_split,
-            split_degree_factor=split_degree_factor, id_cap=id_cap)
-        compact, m_local = compact_labels_jax(clu_raw, id_cap)
-        game_sizes, row_tot, xs, xd, n_cross = _cluster_graph_arrays(
-            s, d, compact, m_cap, effective_sizes, mask=mask_b)
-        overflow = jnp.int32(0)
-        if game:
-            # λ from the LOCAL cluster graph, like the host combine:
-            # Thm 5's feasible range is a per-id-space quantity, and the
-            # global totals under-weight the balance term by ~n (measured
-            # +22% RF at n=4); the load vector itself stays global
-            lam = _lambda_jax(game_sizes.sum(), n_cross, k,
-                              relative_weight)
-            if game_mode == "scan":
-                row, col, w, ovf = jax_cluster_csr(xs, xd, m_cap, nnz_cap)
-                overflow = ovf.astype(jnp.int32)
-                cluster_assign, rounds = jax_game_rounds_gs(
-                    row, col, w, game_sizes, row_tot, k, lam,
-                    max_rounds=max_rounds, seed=seed, axis=axis)
-            else:
-                cluster_assign, rounds = jax_game_rounds(
-                    xs, xd, game_sizes, row_tot, k, lam,
-                    batch_size=batch_size, max_rounds=max_rounds,
-                    seed=seed, use_pallas=game_mode == "pallas",
-                    axis=axis)
-        else:
-            cluster_assign = jax_greedy_assign(game_sizes, k)
-            rounds = jnp.int32(0)
-        vertex_part = cluster_assign[jnp.clip(compact, 0, m_cap - 1)]
-        lmax = tau * e_real / k          # per-slice balance cap (§III-C)
-        assign_b = transform_jax(s, d, vertex_part, deg, divided, k,
-                                 mask=mask_b, lmax=lmax)
-        for _ in range(restream):
-            vp = majority_vertex_map_jax(s, d, assign_b, num_vertices, k,
-                                         mask=mask_b, axis=axis)
-            assign_b = transform_jax(s, d, vp, deg, divided, k,
-                                     mask=mask_b, lmax=lmax)
-        return (assign_b, m_local[None], rounds[None], next_id[None],
-                overflow[None])
+        vmax = (jnp.maximum(2.0, e_real / cfg.k) if cfg.vmax is None
+                else jnp.float32(cfg.vmax))
+        ctx = StageCtx(num_vertices=num_vertices, vmax=vmax, mask=mask_b,
+                       axis="stream",
+                       # per-slice balance cap (§III-C)
+                       lmax=cfg.tau * e_real / cfg.k,
+                       game_mode=game_mode, id_cap=id_cap, m_cap=m_cap,
+                       nnz_cap=nnz_cap)
+        out = run_clugp_body(s, d, ctx, cfg, JAX_STAGES)
+        return (out.assign, out.cluster.m[None], out.rounds[None],
+                out.cluster.next_id[None],
+                out.overflow.astype(jnp.int32)[None])
 
     # check_vma=False: the game's while_loop has no replication rule on
     # the container's jax (0.4.x shard_map check_rep)
@@ -405,8 +334,8 @@ def _make_sharded_fn(mesh, e_per: int, num_vertices: int, k: int,
     return jax.jit(mapped)
 
 
-def _partition_sharded(src: np.ndarray, dst: np.ndarray, num_vertices: int,
-                       cfg: CLUGPConfig, nodes: int, mesh) -> CLUGPResult:
+def _run_sharded(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+                 cfg: CLUGPConfig, nodes: int, mesh) -> CLUGPResult:
     E = src.shape[0]
     if mesh is None:
         if jax.device_count() < nodes:
@@ -424,30 +353,20 @@ def _partition_sharded(src: np.ndarray, dst: np.ndarray, num_vertices: int,
     dst_p = np.zeros(e_pad, dtype=np.int32)
     mask = np.zeros(e_pad, dtype=bool)
     src_p[:E], dst_p[:E], mask[:E] = src, dst, True
-    id_cap = _id_cap_guess(num_vertices, e_per)
-    m_cap = _m_cap_guess(num_vertices)
-    nnz_cap = 8 * m_cap
+    caps = _init_caps(num_vertices, e_per)
     while True:
         run = _make_sharded_fn(
-            mesh, e_per, num_vertices, cfg.k,
-            None if cfg.vmax is None else float(cfg.vmax), cfg.tau,
-            cfg.split, cfg.split_degree_factor, cfg.batch_size,
-            cfg.max_rounds, cfg.seed, cfg.game, cfg.effective_sizes,
-            cfg.relative_weight, cfg.restream, _game_mode(cfg.kernel),
-            id_cap, m_cap, nnz_cap)
+            mesh, e_per, num_vertices, cfg,
+            resolve_game_mode(cfg.kernel, caps.m_cap),
+            caps.id_cap, caps.m_cap, caps.nnz_cap)
         with mesh:
             assign_p, m_locals, rounds_arr, next_ids, overflows = run(
                 jnp.asarray(src_p), jnp.asarray(dst_p), jnp.asarray(mask))
-        ok = True
-        if int(np.asarray(next_ids).max()) > id_cap - 2:
-            id_cap = min(2 * id_cap, num_vertices + 2 * e_per + 2)
-            ok = False
-        if int(np.asarray(m_locals).max()) > m_cap:
-            m_cap = min(2 * m_cap, _pad_to(num_vertices, _BLOCK))
-            ok = False
-        if int(np.asarray(overflows).max()) > 0:
-            nnz_cap = min(2 * nnz_cap, m_cap * m_cap)
-            ok = False
+        caps, ok = _grow_caps(
+            caps, next_id=int(np.asarray(next_ids).max()),
+            m=int(np.asarray(m_locals).max()),
+            overflow=int(np.asarray(overflows).max()) > 0,
+            num_vertices=num_vertices, e_per=e_per)
         if ok:
             break
     assign = np.asarray(assign_p)[:E]

@@ -1,33 +1,35 @@
-"""The CLUGP three-pass pipeline (paper §III) — host reference path.
+"""CLUGP configuration/result types + the deprecated host entry point.
 
-``clugp_partition`` = streaming clustering → cluster-partitioning game →
-partition transformation.  Ablations: ``split=False`` (CLUGP-S),
-``game=False`` (CLUGP-G, greedy cluster placement).  ``restream > 0``
-re-consumes the stream that many extra times with the previous pass's
-realized vertex→partition majority as the prior (free-cut reuse +
-load-aware reassign) — prioritized restreaming, beyond the paper.
+The three-pass pipeline body itself lives in ``repro.core.stages``
+(``run_clugp_body`` — one parametric body for every backend) and the
+strategy wrappers in ``repro.core.partitioner`` (``partition``).  This
+module keeps the shared types:
 
-This module is the **"np" backend** of the backend-parametric partitioner
-(``repro.core.partitioner``): the interpreted host loops stay as the
-equivalence oracle, while the ``"jit"`` and ``"sharded"`` backends run the
-same three passes device-resident.  The old ``clugp_partition_parallel``
-host loop over nodes lives on there as the sharded combine's reference.
+- ``CLUGPConfig`` — frozen (hashable) so device strategies can pass it
+  straight through ``jax.jit`` static args and cache keys, and the
+  ``GraphSession`` façade can serialize it (`repro.session`).
+  Ablations: ``split=False`` (CLUGP-S), ``game=False`` (CLUGP-G).
+  ``restream > 0`` re-consumes the stream that many extra times with the
+  previous pass's realized vertex→partition majority as the prior
+  (prioritized restreaming, beyond the paper).  ``unroll`` unrolls the
+  blocked clustering scan's inner per-edge loop (2 = the ROADMAP
+  headroom knob; lowering-only, bit-identical results).
+- ``CLUGPResult`` — assignment + per-pass state + stats.
+- ``clugp_partition`` — the seed's host entry point, now a deprecation
+  shim over ``partition(..., backend="np")``.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .clustering import (ClusteringResult, default_vmax,
-                         streaming_clustering_np)
-from .game import (ClusterGraph, best_response_rounds, contract,
-                   greedy_assign, lambda_from_weight, lambda_max)
-from .transform import majority_vertex_map_np, transform_np
-from . import metrics
+from .clustering import ClusteringResult
+from .game import ClusterGraph
 
 
-@dataclass
+@dataclass(frozen=True)
 class CLUGPConfig:
     k: int
     tau: float = 1.0
@@ -41,6 +43,7 @@ class CLUGPConfig:
     effective_sizes: bool = False      # beyond-paper: balance |c_i|+boundary
     restream: int = 0                  # extra prioritized-restream passes
     kernel: str = "auto"               # game sweep: "auto" | "pallas" | "xla"
+    unroll: int = 1                    # clustering inner-scan unroll (1 = off)
     seed: int = 0
 
     @staticmethod
@@ -71,46 +74,11 @@ class CLUGPResult:
 
 def clugp_partition(src: np.ndarray, dst: np.ndarray, num_vertices: int,
                     cfg: CLUGPConfig) -> CLUGPResult:
-    E = src.shape[0]
-    vmax = cfg.vmax if cfg.vmax is not None else default_vmax(E, cfg.k)
-    # Pass 1: streaming clustering
-    clus = streaming_clustering_np(src, dst, num_vertices, vmax,
-                                   allow_split=cfg.split,
-                                   split_degree_factor=cfg.split_degree_factor)
-    # Pass 2: cluster partitioning
-    cg = contract(src, dst, clus.clu)
-    game_cg = cg
-    if cfg.effective_sizes:
-        boundary = np.asarray(cg.adj.sum(axis=1)).ravel()
-        game_cg = ClusterGraph(cg.sizes + boundary, cg.adj,
-                               cg.vertex_cluster, cg.m)
-    if cfg.game:
-        lam = (lambda_max(game_cg, cfg.k) if cfg.relative_weight is None
-               else lambda_from_weight(game_cg, cfg.k, cfg.relative_weight))
-        game = best_response_rounds(game_cg, cfg.k, lam=lam,
-                                    batch_size=cfg.batch_size,
-                                    max_rounds=cfg.max_rounds, seed=cfg.seed)
-        cluster_assign, rounds = game.assign, game.rounds
-    else:
-        cluster_assign, rounds = greedy_assign(game_cg, cfg.k), 0
-    # Pass 3: transformation
-    vertex_part = cluster_assign[np.maximum(clus.clu, 0)].astype(np.int32)
-    assign = transform_np(src, dst, vertex_part, clus.deg, clus.divided,
-                          cfg.k, cfg.tau)
-    # Restream passes: the realized edge placement becomes the next prior
-    rf_trace = []
-    for _ in range(cfg.restream):
-        rf_trace.append(metrics.replication_factor(
-            src, dst, assign, num_vertices, cfg.k))
-        vp = majority_vertex_map_np(src, dst, assign, num_vertices, cfg.k)
-        assign = transform_np(src, dst, vp, clus.deg, clus.divided,
-                              cfg.k, cfg.tau)
-    res = CLUGPResult(assign, clus, cg, cluster_assign, rounds)
-    res.stats = metrics.summarize(src, dst, assign, num_vertices, cfg.k)
-    res.stats["num_clusters"] = clus.num_clusters
-    res.stats["game_rounds"] = rounds
-    res.stats["backend"] = "np"
-    if cfg.restream:
-        rf_trace.append(res.stats["rf"])
-        res.stats["restream_rf_trace"] = [round(r, 4) for r in rf_trace]
-    return res
+    """Deprecated shim for the host pipeline — delegates to the stage body
+    via ``partition(..., backend="np")`` (bit-identical results)."""
+    warnings.warn(
+        "clugp_partition is deprecated; use repro.core.partition(..., "
+        "backend='np') or repro.session.GraphSession",
+        DeprecationWarning, stacklevel=2)
+    from .partitioner import partition
+    return partition(src, dst, num_vertices, cfg, backend="np")

@@ -1,0 +1,368 @@
+"""The CLUGP pipeline as a stage protocol — ONE parametric body.
+
+The paper's pipeline is three composable passes (§III): streaming
+clustering → cluster partitioning (the game) → partition transformation,
+plus optional prioritized-restream passes (Awadelkarim & Ugander).  PR 4
+gave the pipeline three backends but expressed the pass sequence three
+times (`_partition_np_nodes`, `_jit_pipeline`, `_make_sharded_fn`), each
+re-plumbing mask/axis/vmax by hand.  This module is the fix the ROADMAP
+named: the pass structure is the stable abstraction, so the API exposes
+**stages**, not backends.
+
+- ``StageCtx`` carries everything that distinguishes a strategy run:
+  the live-edge ``mask`` (sharded padding), the mesh ``axis`` for psum
+  hooks (None = local), the per-slice ``vmax`` (float or traced scalar),
+  the transform balance-cap override ``lmax``, the resolved game kernel,
+  and the static id/m/nnz caps of the device paths.
+- ``ClusterStage`` / ``ContractStage`` / ``GameStage`` /
+  ``TransformStage`` / ``RestreamLoop`` are the pure, jit-able stage
+  callables; a ``StageSet`` bundles one implementation of each.
+- ``run_clugp_body(src, dst, ctx, cfg, stages)`` is the ONE pipeline
+  body.  ``"np"`` executes it with ``HOST_STAGES`` (the interpreted
+  host adapters, kept as the equivalence oracle), ``"jit"`` and
+  ``"sharded"`` with ``JAX_STAGES`` — the sharded strategy only differs
+  by what it puts in the ctx (mask, ``axis="stream"``, traced vmax,
+  per-slice lmax), exactly the way PR 3's ``_gas_body`` unified the GAS
+  drivers.
+
+Strategy wrappers (jit entry, shard_map entry, host combine, adaptive
+cap retries) live in ``repro.core.partitioner``; the façade over
+partition → layout → GAS is ``repro.session.GraphSession``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Protocol
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import metrics
+from .clustering import (compact_labels_jax, streaming_clustering_jax,
+                         streaming_clustering_np)
+from .game import (ClusterGraph, best_response_rounds, contract,
+                   greedy_assign, jax_cluster_csr, jax_game_rounds,
+                   jax_game_rounds_gs, jax_greedy_assign, lambda_from_weight,
+                   lambda_max)
+from .transform import (majority_vertex_map_jax, majority_vertex_map_np,
+                        transform_jax, transform_np)
+
+
+# ----------------------------------------------------------------- context
+
+@dataclass(frozen=True)
+class StageCtx:
+    """Per-run stage context: everything the three strategies used to
+    re-plumb by hand.  Host runs only need ``num_vertices`` and ``vmax``;
+    device runs add the static caps; sharded runs add mask/axis/lmax
+    (traced values are fine — the ctx never crosses a jit boundary)."""
+    num_vertices: int
+    vmax: Any                  # float (host/jit) or traced scalar (sharded)
+    mask: Any = None           # live-edge mask; None = every lane is real
+    axis: str | None = None    # mesh axis for psum hooks; None = local
+    lmax: Any = None           # transform balance-cap override (per slice)
+    game_mode: str = "scan"    # resolved kernel: "scan" | "xla" | "pallas"
+    id_cap: int = 0            # cluster-id space (jax clustering scan)
+    m_cap: int = 0             # compacted-cluster cap (game tables)
+    nnz_cap: int = 0           # aggregated cluster-CSR lanes (GS game)
+
+
+# ------------------------------------------------------------- stage protocol
+
+class ClusterStage(Protocol):
+    """Pass 1: edge stream → clustering state (labels, degrees, marks)."""
+    def __call__(self, src, dst, ctx: StageCtx, cfg) -> Any: ...
+
+
+class ContractStage(Protocol):
+    """Streamed graph × labels → cluster-graph state for the game."""
+    def __call__(self, src, dst, cstate, ctx: StageCtx, cfg) -> Any: ...
+
+
+class GameStage(Protocol):
+    """Pass 2: cluster graph → (cluster→partition, rounds, overflow)."""
+    def __call__(self, gstate, ctx: StageCtx, cfg) -> tuple: ...
+
+
+class TransformStage(Protocol):
+    """Pass 3: stream × vertex→partition prior → edge→partition."""
+    def __call__(self, src, dst, vertex_part, cstate, ctx: StageCtx,
+                 cfg) -> Any: ...
+
+
+class RestreamLoop(Protocol):
+    """Prioritized restreams over (possibly sliced) streams — the shape of
+    ``restream_loop`` below."""
+    def __call__(self, src, dst, assign, parts, ctx: StageCtx, cfg,
+                 stages) -> tuple: ...
+
+
+@dataclass(frozen=True)
+class StageSet:
+    """One implementation of every stage.  ``vertex_part`` joins passes 1
+    and 2 (cluster assignment → vertex prior); ``prior`` is the restream
+    majority map; ``trace`` (host only) samples RF before each restream
+    pass for the ``restream_rf_trace`` stat."""
+    cluster: Callable
+    contract: Callable
+    game: Callable
+    vertex_part: Callable
+    transform: Callable
+    prior: Callable
+    trace: Callable | None = None
+
+
+# ------------------------------------------------------------- stage states
+
+class JaxCluster(NamedTuple):
+    compact: Any               # int32[V] dense labels, -1 = never streamed
+    deg: Any                   # int32[V] streamed degree
+    divided: Any               # bool[V] split at least once
+    replicas: Any              # int32[V] mirrors created while clustering
+    m: Any                     # traced cluster count (≤ m_cap or overflowed)
+    next_id: Any               # traced raw-id high-water mark (cap retry)
+
+
+class JaxGraph(NamedTuple):
+    sizes: Any                 # (m_cap,) game sizes (intra [+ boundary])
+    row_tot: Any               # (m_cap,) boundary row totals
+    xs: Any                    # cross-edge cluster endpoints (pad: m_cap)
+    xd: Any
+    n_cross: Any               # traced cross-edge count (λ_max)
+
+
+class HostGraph(NamedTuple):
+    cg: ClusterGraph           # the contraction (result object)
+    game_cg: ClusterGraph      # what the game balances (effective sizes)
+
+
+class PipelineOut(NamedTuple):
+    assign: Any
+    cluster: Any               # ClusteringResult (host) / JaxCluster (jax)
+    graph: Any                 # HostGraph / JaxGraph
+    cluster_assign: Any
+    rounds: Any
+    overflow: Any              # GS nnz-cap overflow flag (host: False)
+    trace: tuple               # pre-pass RF per restream (host runs only)
+
+
+# ----------------------------------------------------------------- the body
+
+def run_clugp_body(src, dst, ctx: StageCtx, cfg, stages: StageSet
+                   ) -> PipelineOut:
+    """THE pipeline body — the only place the cluster → contract → game →
+    transform (→ restream) sequence exists.  Every backend strategy runs
+    this exact function; they differ only in the ``stages`` adapters and
+    what they put in ``ctx``."""
+    cstate = stages.cluster(src, dst, ctx, cfg)
+    gstate = stages.contract(src, dst, cstate, ctx, cfg)
+    cluster_assign, rounds, overflow = stages.game(gstate, ctx, cfg)
+    vp = stages.vertex_part(cluster_assign, cstate, ctx)
+    assign = stages.transform(src, dst, vp, cstate, ctx, cfg)
+    assign, trace = restream_loop(src, dst, assign, [(None, cstate, ctx)],
+                                  ctx, cfg, stages)
+    return PipelineOut(assign, cstate, gstate, cluster_assign, rounds,
+                       overflow, trace)
+
+
+def restream_loop(src, dst, assign, parts, ctx: StageCtx, cfg,
+                  stages: StageSet) -> tuple:
+    """The RestreamLoop stage: ``cfg.restream`` prioritized passes — the
+    previous pass's realized majority becomes the prior, the transform
+    re-runs per stream slice.
+
+    ``parts`` is ``[(sl, cstate, ctx_slice), …]``: one entry covering the
+    whole stream (``sl=None`` — the in-body form every backend uses) or
+    one per contiguous host-combine slice (``sl`` a python ``slice``; the
+    prior then spans all slices while each transform sees only its own —
+    the §III-C combine's host twin of the sharded psum'd prior)."""
+    trace = []
+    for _ in range(int(cfg.restream)):
+        if stages.trace is not None:
+            trace.append(stages.trace(src, dst, assign, ctx, cfg))
+        vp = stages.prior(src, dst, assign, ctx, cfg)
+        if len(parts) == 1 and parts[0][0] is None:
+            _, cstate, pctx = parts[0]
+            assign = stages.transform(src, dst, vp, cstate, pctx, cfg)
+        else:
+            assign = np.concatenate([
+                stages.transform(src[sl], dst[sl], vp, cstate, pctx, cfg)
+                for sl, cstate, pctx in parts])
+    return assign, tuple(trace)
+
+
+# ------------------------------------------------------------ host adapters
+
+def _host_cluster(src, dst, ctx, cfg):
+    return streaming_clustering_np(
+        src, dst, ctx.num_vertices, ctx.vmax, allow_split=cfg.split,
+        split_degree_factor=cfg.split_degree_factor)
+
+
+def _host_contract(src, dst, cstate, ctx, cfg):
+    cg = contract(src, dst, cstate.clu)
+    game_cg = cg
+    if cfg.effective_sizes:
+        boundary = np.asarray(cg.adj.sum(axis=1)).ravel()
+        game_cg = ClusterGraph(cg.sizes + boundary, cg.adj,
+                               cg.vertex_cluster, cg.m)
+    return HostGraph(cg, game_cg)
+
+
+def _host_game(gstate, ctx, cfg):
+    if not cfg.game:
+        return greedy_assign(gstate.game_cg, cfg.k), 0, False
+    lam = (lambda_max(gstate.game_cg, cfg.k)
+           if cfg.relative_weight is None
+           else lambda_from_weight(gstate.game_cg, cfg.k,
+                                   cfg.relative_weight))
+    game = best_response_rounds(gstate.game_cg, cfg.k, lam=lam,
+                                batch_size=cfg.batch_size,
+                                max_rounds=cfg.max_rounds, seed=cfg.seed)
+    return game.assign, game.rounds, False
+
+
+def _host_vertex_part(cluster_assign, cstate, ctx):
+    return cluster_assign[np.maximum(cstate.clu, 0)].astype(np.int32)
+
+
+def _host_transform(src, dst, vp, cstate, ctx, cfg):
+    return transform_np(src, dst, vp, cstate.deg, cstate.divided,
+                        cfg.k, cfg.tau)
+
+
+def _host_prior(src, dst, assign, ctx, cfg):
+    return majority_vertex_map_np(src, dst, assign, ctx.num_vertices, cfg.k)
+
+
+def _host_trace(src, dst, assign, ctx, cfg):
+    return metrics.replication_factor(src, dst, assign, ctx.num_vertices,
+                                      cfg.k)
+
+
+HOST_STAGES = StageSet(cluster=_host_cluster, contract=_host_contract,
+                       game=_host_game, vertex_part=_host_vertex_part,
+                       transform=_host_transform, prior=_host_prior,
+                       trace=_host_trace)
+
+
+# ------------------------------------------------------------- jax adapters
+
+def resolve_game_mode(kernel: str, m_cap: int) -> str:
+    """Resolve the game sweep implementation.  ``scan`` = Gauss–Seidel
+    over clusters (the CPU-fast host-exact form), ``pallas`` / ``xla`` =
+    batched-Jacobi rounds on the ``game_bestresponse`` kernel / its XLA
+    fallback (the MXU-shaped form).  ``auto`` picks pallas on TPU and the
+    scan everywhere else; the scan falls back to ``xla`` when ``m_cap``
+    overflows its int32 pair-key space (~46k clusters)."""
+    if kernel not in ("auto", "scan", "pallas", "xla"):
+        raise ValueError(f"unknown game kernel {kernel!r}; expected "
+                         "'auto', 'scan', 'pallas' or 'xla'")
+    mode = kernel
+    if kernel == "auto":
+        mode = "pallas" if jax.default_backend() == "tpu" else "scan"
+    if mode == "scan" and m_cap * (m_cap + 1) >= 2 ** 31:
+        return "xla"
+    return mode
+
+
+def cluster_graph_arrays(src, dst, compact, m_cap: int, effective: bool,
+                         mask=None):
+    """Contract the streamed graph against compacted labels, all in-graph:
+    per-cluster intra sizes, boundary row totals, and the cross-edge
+    cluster endpoints (padded with the drop sentinel ``m_cap``).
+
+    Matches ``contract`` exactly: self-loop edges of clustered vertices
+    COUNT toward their cluster's intra size (cs == cd); ``mask`` excludes
+    the sharded backend's padding lanes, which are fake self-loops."""
+    cs, cd = compact[src], compact[dst]
+    ok = (cs >= 0) & (cd >= 0)
+    if mask is not None:
+        ok = ok & mask
+    sent = jnp.int32(m_cap)
+    intra = ok & (cs == cd)
+    cross = ok & (cs != cd)
+    sizes = jnp.zeros((m_cap,), jnp.float32).at[
+        jnp.where(intra, cs, sent)].add(1.0, mode="drop")
+    xs = jnp.where(cross, cs, sent)
+    xd = jnp.where(cross, cd, sent)
+    row_tot = (jnp.zeros((m_cap,), jnp.float32)
+               .at[xs].add(1.0, mode="drop")
+               .at[xd].add(1.0, mode="drop"))
+    game_sizes = sizes + row_tot if effective else sizes
+    n_cross = cross.sum().astype(jnp.float32)
+    return JaxGraph(game_sizes, row_tot, xs, xd, n_cross)
+
+
+def lambda_jax(total, n_cross, k: int, relative_weight):
+    """λ_max (Thm 5) / relative-weight λ from traced cluster-graph totals
+    (Σ game sizes, #cross edges) — matches ``lambda_max``/
+    ``lambda_from_weight`` (adj.sum()/2 == n_cross)."""
+    lam_max = jnp.where(total > 0,
+                        (k * k) * n_cross / jnp.maximum(total * total, 1.0),
+                        1.0)
+    if relative_weight is None:
+        return lam_max
+    w = min(max(relative_weight, 1e-3), 1 - 1e-3)
+    lam = lam_max * (w / (1 - w))
+    return jnp.where((total > 0) & (n_cross > 0), lam, 1.0)
+
+
+def _jax_cluster(src, dst, ctx, cfg):
+    clu_raw, deg, divided, replicas, next_id = streaming_clustering_jax(
+        src, dst, ctx.num_vertices, ctx.vmax, allow_split=cfg.split,
+        split_degree_factor=cfg.split_degree_factor, id_cap=ctx.id_cap,
+        unroll=cfg.unroll)
+    compact, m = compact_labels_jax(clu_raw, ctx.id_cap)
+    return JaxCluster(compact, deg, divided, replicas, m, next_id)
+
+
+def _jax_contract(src, dst, cstate, ctx, cfg):
+    return cluster_graph_arrays(src, dst, cstate.compact, ctx.m_cap,
+                                cfg.effective_sizes, mask=ctx.mask)
+
+
+def _jax_game(gstate, ctx, cfg):
+    overflow = jnp.bool_(False)
+    if not cfg.game:
+        return jax_greedy_assign(gstate.sizes, cfg.k), jnp.int32(0), overflow
+    # λ from the LOCAL cluster graph on every strategy: Thm 5's feasible
+    # range is a per-id-space quantity (sharded global totals under-weight
+    # the balance term by ~n — measured +22% RF at n=4); the load vector
+    # the game plays against is still psum'd under ctx.axis.
+    lam = lambda_jax(gstate.sizes.sum(), gstate.n_cross, cfg.k,
+                     cfg.relative_weight)
+    if ctx.game_mode == "scan":
+        row, col, w, overflow = jax_cluster_csr(gstate.xs, gstate.xd,
+                                                ctx.m_cap, ctx.nnz_cap)
+        cluster_assign, rounds = jax_game_rounds_gs(
+            row, col, w, gstate.sizes, gstate.row_tot, cfg.k, lam,
+            max_rounds=cfg.max_rounds, seed=cfg.seed, axis=ctx.axis)
+    else:
+        cluster_assign, rounds = jax_game_rounds(
+            gstate.xs, gstate.xd, gstate.sizes, gstate.row_tot, cfg.k, lam,
+            batch_size=cfg.batch_size, max_rounds=cfg.max_rounds,
+            seed=cfg.seed, use_pallas=ctx.game_mode == "pallas",
+            axis=ctx.axis)
+    return cluster_assign, rounds, overflow
+
+
+def _jax_vertex_part(cluster_assign, cstate, ctx):
+    return cluster_assign[jnp.clip(cstate.compact, 0, ctx.m_cap - 1)]
+
+
+def _jax_transform(src, dst, vp, cstate, ctx, cfg):
+    return transform_jax(src, dst, vp, cstate.deg, cstate.divided, cfg.k,
+                         cfg.tau, mask=ctx.mask, lmax=ctx.lmax)
+
+
+def _jax_prior(src, dst, assign, ctx, cfg):
+    return majority_vertex_map_jax(src, dst, assign, ctx.num_vertices,
+                                   cfg.k, mask=ctx.mask, axis=ctx.axis)
+
+
+JAX_STAGES = StageSet(cluster=_jax_cluster, contract=_jax_contract,
+                      game=_jax_game, vertex_part=_jax_vertex_part,
+                      transform=_jax_transform, prior=_jax_prior)

@@ -339,20 +339,24 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
     never crosses the wire) gives the fleet wire volume comparable to
     ``comm_bytes_mirror_sync`` / ``comm_bytes_halo`` /
     ``comm_bytes_halo_quantized`` / ``comm_bytes_ideal``.
+
+    The whole partition → layout → GAS-cell chain is driven through the
+    ``GraphSession`` façade — this function only owns the HLO parsing and
+    the record bookkeeping.
     """
-    from repro.core import CLUGPConfig, clugp_partition, web_graph
+    from repro.core import CLUGPConfig, web_graph
     from repro.dist.halo import lossy_payload
-    from repro.graph import (CC_PROGRAM, build_layout, gas_step_for_dryrun,
-                             pagerank_program)
     from repro.launch.mesh import make_graph_mesh
+    from repro.session import GraphSession, SessionConfig, resolve_program
 
     g = web_graph(scale=scale, edge_factor=8, seed=0)
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(k))
-    lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig.optimized(k)))
+    sess.partition(g.src, g.dst, g.num_vertices).layout()
+    lay = sess.partition_layout
     mesh = make_graph_mesh(k)
-    programs = (("pagerank", pagerank_program(g.num_vertices)),
-                ("cc", CC_PROGRAM))
+    programs = tuple(
+        (name, resolve_program(name, g.num_vertices))
+        for name in ("pagerank", "cc"))
     recs = []
     for pname, prog in programs:
         lossy = lossy_payload(prog.combine, prog.dtype)
@@ -368,9 +372,9 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                                                          lossy)}
             t0 = time.time()
             try:
-                jitted, args = gas_step_for_dryrun(prog, lay, mesh,
-                                                   iters=iters,
-                                                   exchange=exchange)
+                jitted, args = sess.dryrun_step(pname, mesh=mesh,
+                                                iters=iters,
+                                                exchange=exchange)
                 compiled = jitted.lower(*args).compile()
                 coll = collective_bytes(compiled.as_text())
                 total = coll["total"] * k

@@ -1,0 +1,239 @@
+"""GraphSession — one object from edge stream to distributed analytics.
+
+The repo's workload is a three-hop chain: CLUGP partition the stream
+(`repro.core.partition`), build the vertex-cut device tables
+(`repro.graph.build_layout`), run GAS programs over a mesh with a chosen
+mirror wire format (`repro.graph.engine` × `repro.dist.halo`).  Before
+this module every launcher/benchmark/example hand-wired the chain; the
+session makes it one fluent object with a **serializable config**, so a
+run is reproducible from a JSON blob:
+
+    from repro.session import GraphSession, SessionConfig
+    from repro.core import CLUGPConfig
+
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig.optimized(8),
+                                      backend="jit", exchange="quantized"))
+    sess = GraphSession.from_json(sess.to_json())     # round-trips
+    pr = sess.partition(src, dst, V).layout().run("pagerank")
+    cc = sess.run("cc", mesh=make_graph_mesh(8))      # same layout, any mesh
+    sess.comm_bytes()        # modelled wire bytes/iter per exchange
+
+``partition`` accepts any backend (`np`/`jit`/`sharded`, `nodes` for the
+§III-C stream split); ``with_partition`` adopts an external edge→partition
+assignment (baselines) so the layout/engine/accounting half of the session
+works on it; ``run`` takes a program name (``"pagerank"``/``"cc"``) or any
+``GASProgram`` and simulates on one device (``mesh=None``) or shard_maps
+one partition per device; ``dryrun_step`` hands the compile-only cell to
+``launch.dryrun --graph``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+from .core import metrics
+from .core.partitioner import BACKENDS, partition
+from .core.pipeline import CLUGPConfig, CLUGPResult
+from .graph import (CC_PROGRAM, GASProgram, PartitionLayout, build_layout,
+                    gas_step_for_dryrun, pagerank_program, shard_map_gas,
+                    simulate_gas)
+
+EXCHANGES = ("dense", "halo", "quantized")
+PROGRAMS = ("pagerank", "cc")
+
+
+def resolve_program(program, num_vertices: int) -> GASProgram:
+    """Name → built-in GASProgram (a GASProgram passes through)."""
+    if isinstance(program, GASProgram):
+        return program
+    if program == "pagerank":
+        return pagerank_program(num_vertices)
+    if program == "cc":
+        return CC_PROGRAM
+    raise ValueError(f"unknown program {program!r}; expected a GASProgram "
+                     f"or one of {PROGRAMS}")
+
+
+@dataclass(frozen=True)
+class SessionConfig:
+    """Everything a reproducible partition→layout→GAS run needs.  Frozen
+    and JSON-round-trippable (``to_json``/``from_json``): two sessions
+    built from the same blob produce identical partitions and compile
+    identical GAS cells (tested)."""
+    clugp: CLUGPConfig
+    backend: str = "np"        # partitioner strategy: np | jit | sharded
+    nodes: int = 1             # §III-C stream-split width
+    exchange: str = "halo"     # default mirror wire format for run()
+    iters: int = 30            # default GAS iterations
+    pad_multiple: int = 8      # layout table padding
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; expected "
+                             f"one of {BACKENDS}")
+        if self.exchange not in EXCHANGES:
+            raise ValueError(f"unknown exchange {self.exchange!r}; "
+                             f"expected one of {EXCHANGES}")
+        if self.nodes < 1:
+            raise ValueError(f"nodes must be >= 1, got {self.nodes}")
+        if not isinstance(self.clugp, CLUGPConfig):
+            raise TypeError("SessionConfig.clugp must be a CLUGPConfig")
+
+    def to_json(self) -> str:
+        # asdict recurses into the nested CLUGPConfig
+        return json.dumps(dataclasses.asdict(self), indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SessionConfig":
+        d = json.loads(text)
+        clugp = CLUGPConfig(**d.pop("clugp"))
+        return cls(clugp=clugp, **d)
+
+
+class GraphSession:
+    """Fluent façade: ``GraphSession(cfg).partition(...).layout().run(...)``.
+
+    ``partition``/``with_partition``/``layout`` return ``self`` for
+    chaining; ``run`` returns the program's dense (V,) master values.
+    The layout is built lazily by ``run``/``comm_bytes`` if ``layout()``
+    was not called explicitly."""
+
+    def __init__(self, cfg: SessionConfig | CLUGPConfig, **overrides):
+        if isinstance(cfg, CLUGPConfig):
+            cfg = SessionConfig(clugp=cfg, **overrides)
+        elif overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        if not isinstance(cfg, SessionConfig):
+            raise TypeError("GraphSession takes a SessionConfig or a "
+                            "CLUGPConfig (+ SessionConfig overrides)")
+        self.cfg = cfg
+        self.result: CLUGPResult | None = None
+        self._layout: PartitionLayout | None = None
+        self._src = self._dst = None
+        self._num_vertices: int | None = None
+
+    # ----------------------------------------------------------- config
+
+    @property
+    def k(self) -> int:
+        return self.cfg.clugp.k
+
+    def to_json(self) -> str:
+        return self.cfg.to_json()
+
+    @classmethod
+    def from_json(cls, text: str) -> "GraphSession":
+        return cls(SessionConfig.from_json(text))
+
+    # -------------------------------------------------------- partition
+
+    def partition(self, src, dst, num_vertices: int, *,
+                  mesh=None) -> "GraphSession":
+        """Run the configured CLUGP backend on the edge stream."""
+        self._adopt_graph(src, dst, num_vertices)
+        self.result = partition(self._src, self._dst, self._num_vertices,
+                                self.cfg.clugp, backend=self.cfg.backend,
+                                nodes=self.cfg.nodes, mesh=mesh)
+        return self
+
+    def with_partition(self, src, dst, num_vertices: int,
+                       assign) -> "GraphSession":
+        """Adopt an externally computed edge→partition assignment (e.g. a
+        baseline partitioner) so layout/run/comm accounting work on it."""
+        self._adopt_graph(src, dst, num_vertices)
+        assign = np.asarray(assign)
+        if assign.shape[0] != self._src.shape[0]:
+            raise ValueError(
+                f"assignment covers {assign.shape[0]} edges but the "
+                f"stream has {self._src.shape[0]}")
+        res = CLUGPResult(assign, None, None, None, 0)
+        res.stats = metrics.summarize(self._src, self._dst, assign,
+                                      self._num_vertices, self.k)
+        res.stats["backend"] = "external"
+        self.result = res
+        return self
+
+    def _adopt_graph(self, src, dst, num_vertices: int) -> None:
+        self._src = np.asarray(src)
+        self._dst = np.asarray(dst)
+        self._num_vertices = int(num_vertices)
+        self._layout = None
+        self.result = None
+
+    def _require_partition(self) -> None:
+        if self.result is None:
+            raise RuntimeError(
+                "GraphSession: no partition yet — call partition(src, dst, "
+                "V) or with_partition(...) first")
+
+    @property
+    def assign(self) -> np.ndarray:
+        self._require_partition()
+        return self.result.assign
+
+    @property
+    def stats(self) -> dict:
+        self._require_partition()
+        return self.result.stats
+
+    # ----------------------------------------------------------- layout
+
+    def layout(self, pad_multiple: int | None = None) -> "GraphSession":
+        """Build the vertex-cut device tables for the current partition."""
+        self._require_partition()
+        self._layout = build_layout(
+            self._src, self._dst, self.result.assign, self._num_vertices,
+            self.k, pad_multiple or self.cfg.pad_multiple)
+        return self
+
+    @property
+    def partition_layout(self) -> PartitionLayout:
+        if self._layout is None:
+            self.layout()
+        return self._layout
+
+    def comm_bytes(self) -> dict:
+        """Modelled mirror-sync wire bytes per GAS iteration, one entry
+        per exchange backend plus the ragged ideal and the dense psum
+        baseline (the Fig. 8 accounting)."""
+        lay = self.partition_layout
+        return {"ideal": lay.comm_bytes_ideal(),
+                "quantized": lay.comm_bytes_halo_quantized(),
+                "halo": lay.comm_bytes_halo(),
+                "dense_gather": lay.comm_bytes_mirror_sync(),
+                "allreduce": lay.comm_bytes_dense()}
+
+    # ------------------------------------------------------------- GAS
+
+    def run(self, program="pagerank", *, iters: int | None = None,
+            exchange: str | None = None, mesh=None,
+            axis: str = "parts") -> np.ndarray:
+        """Run a GAS program on the session's layout and return the dense
+        (V,) master values.  ``mesh=None`` simulates the stacked k-device
+        engine on one device; with a mesh (axis size == k) the program
+        shard_maps one partition per device — bit-identical results by
+        construction (shared ``_gas_body``)."""
+        lay = self.partition_layout
+        prog = resolve_program(program, self._num_vertices)
+        iters = self.cfg.iters if iters is None else iters
+        exchange = exchange or self.cfg.exchange
+        if mesh is None:
+            out = simulate_gas(prog, lay, iters=iters, exchange=exchange)
+        else:
+            out = shard_map_gas(prog, lay, mesh, iters=iters, axis=axis,
+                                exchange=exchange)
+        if np.issubdtype(out.dtype, np.integer):
+            out = out.astype(np.int64)     # label programs (CC)
+        return out
+
+    def dryrun_step(self, program="pagerank", *, mesh, iters: int = 1,
+                    exchange: str | None = None, axis: str = "parts"):
+        """(jitted_fn, example_args) for one shard_map GAS step — what
+        ``launch.dryrun --graph`` lowers to parse collective bytes."""
+        lay = self.partition_layout
+        prog = resolve_program(program, self._num_vertices)
+        return gas_step_for_dryrun(prog, lay, mesh, axis=axis, iters=iters,
+                                   exchange=exchange or self.cfg.exchange)

@@ -1,0 +1,186 @@
+"""GraphSession façade (repro.session): config round-trips, the fluent
+partition → layout → run chain, external assignments, and the
+multi-device smoke (sharded partition + shard_map GAS + dry-run
+collective bytes, all from one JSON blob).
+"""
+import numpy as np
+import pytest
+
+from repro.core import CLUGPConfig, partition, web_graph
+from repro.graph import build_layout, reference_pagerank, simulate_cc, \
+    simulate_pagerank
+from repro.session import GraphSession, SessionConfig, resolve_program
+
+
+@pytest.fixture(scope="module")
+def graph10():
+    return web_graph(scale=10, edge_factor=6, seed=3)
+
+
+# --------------------------------------------------------------- config
+
+def test_config_json_round_trip():
+    cfg = SessionConfig(clugp=CLUGPConfig.optimized(8, restream=2),
+                        backend="jit", nodes=1, exchange="quantized",
+                        iters=17, pad_multiple=16)
+    assert SessionConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_config_round_trip_identical_partition(graph10):
+    """Two sessions built from the same JSON blob partition identically —
+    the reproducibility contract."""
+    g = graph10
+    cfg = SessionConfig(clugp=CLUGPConfig.optimized(8, restream=1))
+    s1 = GraphSession(cfg).partition(g.src, g.dst, g.num_vertices)
+    s2 = GraphSession.from_json(s1.to_json()).partition(
+        g.src, g.dst, g.num_vertices)
+    assert s1.cfg == s2.cfg
+    np.testing.assert_array_equal(s1.assign, s2.assign)
+    assert s1.comm_bytes() == s2.comm_bytes()
+
+
+def test_config_rejects_bad_values():
+    with pytest.raises(ValueError, match="unknown backend"):
+        SessionConfig(clugp=CLUGPConfig(k=4), backend="cuda")
+    with pytest.raises(ValueError, match="unknown exchange"):
+        SessionConfig(clugp=CLUGPConfig(k=4), exchange="carrier-pigeon")
+    with pytest.raises(ValueError, match="nodes"):
+        SessionConfig(clugp=CLUGPConfig(k=4), nodes=0)
+    with pytest.raises(TypeError):
+        SessionConfig(clugp={"k": 4})
+
+
+def test_session_accepts_bare_clugp_config(graph10):
+    g = graph10
+    sess = GraphSession(CLUGPConfig(k=4), exchange="halo")
+    sess.partition(g.src, g.dst, g.num_vertices)
+    assert sess.cfg.exchange == "halo"
+    assert sess.k == 4
+
+
+# ----------------------------------------------------------- fluent chain
+
+def test_partition_matches_core_api(graph10):
+    g = graph10
+    cfg = CLUGPConfig(k=8)
+    sess = GraphSession(SessionConfig(clugp=cfg)).partition(
+        g.src, g.dst, g.num_vertices)
+    res = partition(g.src, g.dst, g.num_vertices, cfg, backend="np")
+    np.testing.assert_array_equal(sess.assign, res.assign)
+    assert sess.stats["rf"] == res.stats["rf"]
+
+
+def test_run_pagerank_matches_engine_and_oracle(graph10):
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4), iters=20))
+    pr = sess.partition(g.src, g.dst, g.num_vertices).layout().run(
+        "pagerank")
+    direct = simulate_pagerank(sess.partition_layout, iters=20,
+                               exchange="halo")
+    np.testing.assert_array_equal(pr, direct)
+    ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=20)
+    assert np.abs(pr - ref).max() < 1e-4
+
+
+def test_run_cc_int64_labels(graph10):
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
+    cc = sess.partition(g.src, g.dst, g.num_vertices).run("cc", iters=30)
+    assert cc.dtype == np.int64
+    np.testing.assert_array_equal(
+        cc, simulate_cc(sess.partition_layout, iters=30, exchange="halo"))
+
+
+def test_layout_lazy_and_explicit(graph10):
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
+    sess.partition(g.src, g.dst, g.num_vertices)
+    lay = sess.partition_layout          # lazily built
+    ref = build_layout(g.src, g.dst, sess.assign, g.num_vertices, 4)
+    np.testing.assert_array_equal(lay.halo_send, ref.halo_send)
+    sess.layout(pad_multiple=16)         # explicit rebuild, wider padding
+    assert sess.partition_layout.l_max % 16 == 0
+
+
+def test_comm_bytes_table(graph10):
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
+    sess.partition(g.src, g.dst, g.num_vertices)
+    cb = sess.comm_bytes()
+    lay = sess.partition_layout
+    assert cb["ideal"] == lay.comm_bytes_ideal()
+    assert cb["quantized"] == lay.comm_bytes_halo_quantized()
+    assert cb["halo"] == lay.comm_bytes_halo()
+    assert cb["dense_gather"] == lay.comm_bytes_mirror_sync()
+    assert cb["quantized"] < cb["halo"] < cb["dense_gather"]
+
+
+def test_with_partition_external_assignment(graph10):
+    g = graph10
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 4, g.num_edges).astype(np.int32)
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
+    sess.with_partition(g.src, g.dst, g.num_vertices, a)
+    assert sess.stats["backend"] == "external"
+    assert sess.stats["rf"] > 1.0
+    assert sess.comm_bytes()["halo"] > 0
+    with pytest.raises(ValueError, match="covers"):
+        sess.with_partition(g.src, g.dst, g.num_vertices, a[:-1])
+
+
+def test_errors_before_partition_and_bad_program(graph10):
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
+    with pytest.raises(RuntimeError, match="no partition yet"):
+        sess.run("pagerank")
+    with pytest.raises(RuntimeError, match="no partition yet"):
+        sess.layout()
+    sess.partition(g.src, g.dst, g.num_vertices)
+    with pytest.raises(ValueError, match="unknown program"):
+        sess.run("triangle-count")
+    with pytest.raises(ValueError, match="unknown program"):
+        resolve_program("sssp", 10)
+
+
+# --------------------------------------------------- multidevice smoke
+
+SESSION_SMOKE = """
+import numpy as np
+
+from repro.core import CLUGPConfig, web_graph
+from repro.launch.mesh import make_graph_mesh
+from repro.session import GraphSession, SessionConfig
+
+g = web_graph(scale=9, edge_factor=6, seed=3)
+k = 4
+cfg = SessionConfig(clugp=CLUGPConfig.optimized(k, restream=1),
+                    backend="sharded", nodes=4, exchange="quantized")
+s1 = GraphSession(cfg).partition(g.src, g.dst, g.num_vertices)
+s2 = GraphSession.from_json(s1.to_json()).partition(g.src, g.dst,
+                                                    g.num_vertices)
+# the JSON blob reproduces the sharded partition exactly
+np.testing.assert_array_equal(s1.assign, s2.assign)
+assert s1.stats["backend"] == "sharded" and s1.stats["nodes"] == 4
+
+# shard_map GAS over a real 4-device mesh == stacked simulation, bit for bit
+mesh = make_graph_mesh(k)
+sim = s1.run("pagerank", iters=15, exchange="dense")
+sh = s1.run("pagerank", iters=15, exchange="dense", mesh=mesh)
+np.testing.assert_array_equal(sh, sim)
+
+# dry-run cells from round-tripped sessions compile to identical
+# collective bytes (the reproducibility contract on the wire)
+from repro.launch.dryrun import collective_bytes
+bytes_ = []
+for s in (s1, s2):
+    jitted, args = s.dryrun_step("pagerank", mesh=mesh)
+    bytes_.append(collective_bytes(jitted.lower(*args).compile().as_text()))
+assert bytes_[0] == bytes_[1], bytes_
+assert bytes_[0]["total"] > 0, bytes_
+print("SESSION_OK", bytes_[0]["total"])
+"""
+
+
+def test_session_multidevice_smoke(multidevice):
+    out = multidevice(SESSION_SMOKE, n_devices=8)
+    assert "SESSION_OK" in out

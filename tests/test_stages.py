@@ -1,0 +1,119 @@
+"""The stage protocol (repro.core.stages) and the deprecation shims.
+
+The refactor's contract: `run_clugp_body` is the ONLY place the cluster →
+contract → game → transform sequence exists, the old entry points are
+warning shims over it with bit-identical results, and the `cfg.unroll`
+knob is a pure lowering choice.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CLUGPConfig, clugp_partition,
+                        clugp_partition_parallel, partition, web_graph)
+
+
+@pytest.fixture(scope="module")
+def graph10():
+    return web_graph(scale=10, edge_factor=6, seed=3)
+
+
+# -------------------------------------------------------- deprecation shims
+
+def test_clugp_partition_shim_identical_to_new_api(graph10):
+    """The old host entry point warns and returns the same CLUGPResult as
+    the stage-body np strategy — assignment, stats, and per-pass state."""
+    g = graph10
+    cfg = CLUGPConfig(k=8, restream=1)
+    with pytest.warns(DeprecationWarning, match="clugp_partition is "
+                                                "deprecated"):
+        old = clugp_partition(g.src, g.dst, g.num_vertices, cfg)
+    new = partition(g.src, g.dst, g.num_vertices, cfg, backend="np")
+    np.testing.assert_array_equal(old.assign, new.assign)
+    np.testing.assert_array_equal(old.clustering.clu, new.clustering.clu)
+    np.testing.assert_array_equal(old.cluster_assign, new.cluster_assign)
+    assert old.game_rounds == new.game_rounds
+    assert old.stats == new.stats
+    assert "restream_rf_trace" in new.stats
+
+
+def test_clugp_partition_parallel_shim_identical(graph10):
+    g = graph10
+    cfg = CLUGPConfig(k=8, restream=1)
+    with pytest.warns(DeprecationWarning, match="clugp_partition_parallel"):
+        old = clugp_partition_parallel(g.src, g.dst, g.num_vertices, cfg,
+                                       n_nodes=3)
+    new = partition(g.src, g.dst, g.num_vertices, cfg, backend="np",
+                    nodes=3)
+    np.testing.assert_array_equal(old.assign, new.assign)
+    assert old.stats == new.stats
+    assert old.stats["per_node"] == new.stats["per_node"]
+
+
+def test_new_api_does_not_warn(graph10):
+    import warnings
+
+    g = graph10
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=4),
+                  backend="np")
+
+
+# ------------------------------------------------------------- one body
+
+def test_single_pipeline_body_shared_by_strategies():
+    """Structural guard for the refactor's headline: the cluster →
+    contract → game → transform sequence exists exactly once
+    (stages.run_clugp_body), and every strategy routes through it."""
+    import inspect
+
+    from repro.core import partitioner, stages
+
+    src = inspect.getsource(partitioner)
+    # strategies may not call stage internals directly — only the body
+    for fn in ("streaming_clustering", "jax_game_rounds", "transform_np",
+               "transform_jax", "best_response_rounds",
+               "majority_vertex_map"):
+        assert fn not in src, f"partitioner re-plumbs stage {fn!r}"
+    assert src.count("run_clugp_body") >= 3   # np, np-nodes, jit, sharded
+    body = inspect.getsource(stages.run_clugp_body)
+    for stage in ("stages.cluster", "stages.contract", "stages.game",
+                  "stages.transform"):
+        assert stage in body
+
+
+def test_np_nodes_restream_trace_recorded(graph10):
+    """The shared restream loop now records the RF trace for the host
+    combine too (monotone like the single-stream trace)."""
+    g = graph10
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig(k=8, restream=1), backend="np", nodes=3)
+    trace = res.stats["restream_rf_trace"]
+    assert len(trace) == 2 and trace[1] < trace[0]
+
+
+# ------------------------------------------------------------- unroll knob
+
+def test_unroll_is_bit_identical_on_jit(graph10):
+    """cfg.unroll only changes the clustering scan's lowering — the whole
+    deterministic pipeline (greedy game + restream) is bit-identical."""
+    g = graph10
+    base = partition(g.src, g.dst, g.num_vertices,
+                     CLUGPConfig(k=8, game=False, restream=1),
+                     backend="jit")
+    unrolled = partition(g.src, g.dst, g.num_vertices,
+                         CLUGPConfig(k=8, game=False, restream=1, unroll=2),
+                         backend="jit")
+    np.testing.assert_array_equal(base.assign, unrolled.assign)
+    np.testing.assert_array_equal(base.clustering.clu,
+                                  unrolled.clustering.clu)
+
+
+def test_unroll_ignored_by_host_oracle(graph10):
+    g = graph10
+    a = partition(g.src, g.dst, g.num_vertices,
+                  CLUGPConfig(k=4, game=False), backend="np").assign
+    b = partition(g.src, g.dst, g.num_vertices,
+                  CLUGPConfig(k=4, game=False, unroll=2),
+                  backend="np").assign
+    np.testing.assert_array_equal(a, b)
