@@ -16,8 +16,13 @@ import time
 import numpy as np
 
 from repro.core import web_graph
-from repro.graph import (build_layout, build_layout_reference,
-                         reference_pagerank, simulate_pagerank)
+from repro.dist.halo import lossy_payload
+from repro.graph import (PROGRAM_NAMES, build_layout,
+                         build_layout_reference, get_program,
+                         reference_bfs, reference_cc, reference_centrality,
+                         reference_degree, reference_labelprop,
+                         reference_pagerank, reference_ppr, reference_sssp,
+                         simulate_gas, simulate_gas_many, simulate_pagerank)
 from .common import run_partitioner, stream_for
 
 
@@ -54,6 +59,79 @@ def fig8_pagerank(scale=11, k=8, iters=20, seed=0):
             tol = 1e-5 if exchange != "quantized" else 1e-4
             assert err < tol, (algo, exchange, err)
         rows.append(row)
+    return rows
+
+
+FUSED_BUNDLE = ("pagerank", "ppr", "centrality")
+
+_REF = {
+    "pagerank": lambda s, d, n, it: reference_pagerank(s, d, n, iters=it),
+    "cc": lambda s, d, n, it: reference_cc(s, d, n),
+    "labelprop": lambda s, d, n, it: reference_labelprop(s, d, n, iters=it),
+    "sssp": lambda s, d, n, it: reference_sssp(s, d, n, iters=it),
+    "bfs": lambda s, d, n, it: reference_bfs(s, d, n, iters=it),
+    "degree": lambda s, d, n, it: reference_degree(s, d, n),
+    "centrality": lambda s, d, n, it: reference_centrality(s, d, n,
+                                                           iters=it),
+    "ppr": lambda s, d, n, it: reference_ppr(s, d, n, iters=it),
+}
+
+
+def program_matrix_bench(scale=10, k=8, iters=20, seed=0):
+    """Program-library wire table: one row per GAS program with its
+    modelled bytes/iter under all three exchanges (the quantized column
+    is lossy-aware — min/int payloads ship exact and pay halo bytes),
+    engine-vs-oracle max error and engine wall time on the quantized
+    wire, plus one fused-bundle row whose ``fused_vs_separate`` column
+    is the headline ratio the CI dry-run gates at < 0.6."""
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    out = run_partitioner("clugp-opt", g, k, seed)
+    lay = build_layout(g.src, g.dst, out[0], g.num_vertices, k)
+    rows = []
+    for name in PROGRAM_NAMES:
+        prog = get_program(name, g.num_vertices)
+        lossy = lossy_payload(prog.combine, prog.dtype)
+        # frontier programs need the label/distance wave to close before
+        # they can match a converged oracle (cc's reference runs to
+        # fixpoint); the per-round oracles match at any count
+        it = max(iters, 40) if name == "cc" else iters
+        ref = _REF[name](g.src, g.dst, g.num_vertices, it)
+        t0 = time.time()
+        got = simulate_gas(prog, lay, iters=it, exchange="quantized")
+        dt = time.time() - t0
+        err = float(np.abs(got.astype(np.float64) -
+                           ref.astype(np.float64)).max())
+        tol = 1e-4 if lossy else 0.0
+        assert err <= tol, (name, err)
+        rows.append({
+            "bench": "program_matrix", "program": name, "k": k,
+            "fused": False, "lossy_payload": lossy,
+            "comm_mb_dense": round(lay.comm_bytes_mirror_sync() / 1e6, 4),
+            "comm_mb_halo": round(lay.comm_bytes_halo() / 1e6, 4),
+            "comm_mb_quantized": round(
+                lay.comm_bytes_exchange("quantized", lossy=lossy) / 1e6, 4),
+            "engine_seconds_quantized": round(dt, 3),
+            "max_err_quantized": err,
+        })
+    # fused bundle: one wire per phase for N programs vs N separate wires
+    progs = [get_program(p, g.num_vertices) for p in FUSED_BUNDLE]
+    t0 = time.time()
+    outs = simulate_gas_many(progs, lay, iters=iters, exchange="quantized")
+    dt = time.time() - t0
+    for name, got in zip(FUSED_BUNDLE, outs):
+        ref = _REF[name](g.src, g.dst, g.num_vertices, iters)
+        assert float(np.abs(got - ref).max()) < 1e-3, name
+    fused_mb = lay.comm_bytes_fused(len(progs), "quantized") / 1e6
+    sep_mb = len(progs) * lay.comm_bytes_exchange("quantized",
+                                                  lossy=True) / 1e6
+    rows.append({
+        "bench": "program_matrix", "program": "+".join(FUSED_BUNDLE),
+        "k": k, "fused": True, "lossy_payload": True,
+        "comm_mb_fused_quantized": round(fused_mb, 4),
+        "comm_mb_separate_quantized": round(sep_mb, 4),
+        "fused_vs_separate": round(fused_mb / sep_mb, 4),
+        "engine_seconds_fused": round(dt, 3),
+    })
     return rows
 
 

@@ -29,7 +29,8 @@ def main() -> None:
     scale = 11 if args.quick else 12
 
     from . import bench_partitioning as bp
-    from .bench_pagerank import fig8_pagerank, layout_build_bench
+    from .bench_pagerank import (fig8_pagerank, layout_build_bench,
+                                 program_matrix_bench)
     from .bench_kernels import kernels_microbench
     from .bench_expert_placement import expert_placement_bench
 
@@ -44,6 +45,10 @@ def main() -> None:
             "fig12_runtime": lambda: bp.fig12_runtime_vs_k(
                 scale=8, ks=(4,), nodes=4, repeats=1),
             "fig8_pagerank": lambda: fig8_pagerank(scale=8, k=4, iters=10),
+            # one row per GAS program (modelled bytes per exchange +
+            # oracle error) and the fused-vs-separate ratio column
+            "program_matrix": lambda: program_matrix_bench(
+                scale=8, k=4, iters=10),
             "layout_build": lambda: layout_build_bench(scale=8, k=4),
             "expert_placement": lambda: expert_placement_bench(
                 E=16, K=2, shards=4),
@@ -59,6 +64,7 @@ def main() -> None:
         "fig6_space": lambda: bp.fig6_space(scale=scale),
         "fig7_runtime": lambda: bp.fig7_runtime_vs_k(scale=scale),
         "fig8_pagerank": lambda: fig8_pagerank(scale=scale - 1),
+        "program_matrix": lambda: program_matrix_bench(scale=scale - 2),
         "layout_build": lambda: layout_build_bench(scale=scale),
         "fig9_ablation": lambda: bp.fig9_ablation(scale=scale),
         "fig10_parallel": lambda: bp.fig10_parallelization(scale=scale),

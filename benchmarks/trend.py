@@ -40,14 +40,16 @@ GOOD_UP_HINTS = ("speedup",)
 GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us")
 # numeric fields that identify a row rather than measure it — part of the
 # match key, never diffed (fig3/fig7 emit one row per k with identical
-# string fields, so k etc. must disambiguate)
+# string fields, so k etc. must disambiguate; "program"/"fused" key the
+# graph dry-run's per-program matrix rows and its fused-bundle row, so a
+# byte move on one program never aliases another's)
 IDENTITY_FIELDS = ("k", "scale", "iters", "seed", "shards", "E", "K",
                    "n_nodes", "exchange", "nodes", "restream", "backend",
-                   "unroll")
+                   "unroll", "program", "fused")
 # identity fields added after a baseline was recorded get a default, so
 # pre-existing artifacts (rows without the key) still match their
 # successors instead of degenerating into removed-row/new-row noise
-IDENTITY_DEFAULTS = {"unroll": 1}
+IDENTITY_DEFAULTS = {"unroll": 1, "fused": False}
 
 
 def find_bench(path: str) -> Path | None:

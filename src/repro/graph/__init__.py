@@ -1,8 +1,17 @@
 """Distributed vertex-cut graph engine (the paper's PowerGraph deployment)."""
 from .partition import (PartitionLayout, build_layout,  # noqa: F401
                         build_layout_reference)
-from .engine import (GASProgram, CC_PROGRAM, pagerank_program,  # noqa: F401
+from .engine import (GASProgram, FusedGAS, fuse_programs,  # noqa: F401
+                     CC_PROGRAM, CC_SENTINEL, DEGREE_PROGRAM,
+                     pagerank_program,
+                     labelprop_program, sssp_program, bfs_program,
+                     centrality_program, ppr_program,
+                     PROGRAM_NAMES, get_program, default_num_seeds,
                      simulate_gas, simulate_pagerank, simulate_cc,
+                     simulate_gas_many,
                      shard_map_gas, shard_map_pagerank, shard_map_cc,
+                     shard_map_gas_many,
                      gas_step_for_dryrun, pagerank_step_for_dryrun,
-                     reference_pagerank, reference_cc)
+                     reference_pagerank, reference_cc, reference_labelprop,
+                     reference_sssp, reference_bfs, reference_degree,
+                     reference_centrality, reference_ppr)

@@ -155,6 +155,238 @@ CC_PROGRAM = GASProgram(name="cc", combine="min", dtype=jnp.int32,
                         init=_cc_init, local=_cc_local_min, apply=_cc_apply)
 
 
+# ------------------------------------------------------- program library
+#
+# The engine's whole point is program-parametric multi-tenant analytics:
+# each program below is a thin GASProgram instantiation with a NumPy
+# ``reference_*`` oracle, spanning every wire-semantics cell the exchange
+# layer distinguishes — (sum, f32) lossy delta-coded payloads with error
+# feedback (pagerank / ppr / centrality), (min, i32) exact label/distance
+# lattices (cc / labelprop / sssp / bfs), and (sum, i32) exact counters
+# (degree).  Source / seed-set parameters are derived deterministically
+# from the vertex-id space so no extra layout tables are needed.
+
+DEFAULT_SOURCE = 0
+
+
+def default_num_seeds(num_vertices: int) -> int:
+    """Seed-set size for labelprop/ppr: ~V/256, at least 2."""
+    return max(2, num_vertices // 256)
+
+
+def _masked_ext(values, mask, fill):
+    """(L_max,) values → (L_max+1,) with invalid slots and the trailing
+    pad bucket forced to ``fill`` (what edge endpoint gathers read)."""
+    safe = jnp.where(mask, values, fill)
+    return jnp.concatenate([safe, jnp.full((1,), fill, safe.dtype)])
+
+
+def _sssp_weight(gu, gv):
+    """Deterministic positive edge weight from the endpoint gids (1..11)
+    — gives SSSP a genuinely weighted metric with no edge-weight table."""
+    return 1 + (3 * gu + 7 * gv) % 11
+
+
+def _edge_gids(dev):
+    gid_ext = jnp.concatenate([dev["vert_gid"],
+                               jnp.full((1,), -1, jnp.int32)])
+    return gid_ext[dev["edge_src"]], gid_ext[dev["edge_dst"]]
+
+
+def _relax_local(dist, dev, weight_fn):
+    """One Bellman-Ford relaxation over the local directed edges:
+    min over incoming (u → v) of dist[u] + w(u, v), min'd with current."""
+    l_max = dev["vert_gid"].shape[0]
+    d_ext = _masked_ext(dist, dev["vert_mask"], CC_SENTINEL)
+    du = d_ext[dev["edge_src"]]
+    gu, gv = _edge_gids(dev)
+    w = weight_fn(gu, gv)
+    # clamping before the add keeps sentinel+w from wrapping int32
+    cand = jnp.where(dev["edge_mask"] & (du < CC_SENTINEL),
+                     jnp.minimum(du, CC_SENTINEL - 64) + w, CC_SENTINEL)
+    relaxed = jax.ops.segment_min(cand, dev["edge_dst"],
+                                  num_segments=l_max + 1)[:l_max]
+    cur = jnp.where(dev["vert_mask"], dist, CC_SENTINEL)
+    return jnp.minimum(cur, relaxed)
+
+
+def _distance_program(name: str, source: int, weight_fn) -> GASProgram:
+    def init(dev):
+        at_src = dev["vert_mask"] & (dev["vert_gid"] == source)
+        return jnp.where(at_src, 0, CC_SENTINEL).astype(jnp.int32)
+
+    def local(dist, dev):
+        return _relax_local(dist, dev, weight_fn)
+
+    def apply(total, aux, dev):
+        clamped = jnp.where(dev["vert_gid"] == source, 0, total)
+        return jnp.where(dev["vert_mask"] & dev["is_master"], clamped,
+                         CC_SENTINEL)
+
+    return GASProgram(name=name, combine="min", dtype=jnp.int32,
+                      init=init, local=local, apply=apply)
+
+
+@lru_cache(maxsize=None)
+def sssp_program(source: int = DEFAULT_SOURCE) -> GASProgram:
+    """Single-source shortest paths (Bellman-Ford relaxations) under the
+    deterministic gid-hash weights — (min, i32), exact on every wire."""
+    return _distance_program("sssp", source, _sssp_weight)
+
+
+@lru_cache(maxsize=None)
+def bfs_program(source: int = DEFAULT_SOURCE) -> GASProgram:
+    """BFS levels from ``source`` (unit-weight min-plus) — (min, i32)."""
+    return _distance_program("bfs", source, lambda gu, gv: 1)
+
+
+@lru_cache(maxsize=None)
+def labelprop_program(num_vertices: int,
+                      num_seeds: int | None = None) -> GASProgram:
+    """Seeded directed label propagation — the paper's own motivating
+    workload: vertices with gid < num_seeds hold their own gid as a fixed
+    label; everything else takes the min label over in-neighbors each
+    round.  Directed propagation + clamped seeds distinguish it from CC's
+    undirected min-label contagion.  (min, i32), exact on every wire."""
+    ns = default_num_seeds(num_vertices) if num_seeds is None else num_seeds
+
+    def init(dev):
+        seeded = dev["vert_mask"] & (dev["vert_gid"] < ns)
+        return jnp.where(seeded, dev["vert_gid"].astype(jnp.int32),
+                         CC_SENTINEL)
+
+    def local(label, dev):
+        l_max = dev["vert_gid"].shape[0]
+        lab_ext = _masked_ext(label, dev["vert_mask"], CC_SENTINEL)
+        prop = jnp.where(dev["edge_mask"], lab_ext[dev["edge_src"]],
+                         CC_SENTINEL)
+        out = jax.ops.segment_min(prop, dev["edge_dst"],
+                                  num_segments=l_max + 1)[:l_max]
+        cur = jnp.where(dev["vert_mask"], label, CC_SENTINEL)
+        return jnp.minimum(cur, out)
+
+    def apply(total, aux, dev):
+        seeded = dev["vert_gid"] < ns
+        clamped = jnp.where(seeded, dev["vert_gid"].astype(jnp.int32),
+                            total)
+        return jnp.where(dev["vert_mask"] & dev["is_master"], clamped,
+                         CC_SENTINEL)
+
+    return GASProgram(name="labelprop", combine="min", dtype=jnp.int32,
+                      init=init, local=local, apply=apply)
+
+
+def _degree_local(value, dev):
+    """Per-slot incident-edge count (out at src + in at dst); ignores the
+    carried value, so any iteration count ≥ 1 yields the same answer."""
+    l_max = dev["vert_gid"].shape[0]
+    ones = dev["edge_mask"].astype(jnp.int32)
+    out = jax.ops.segment_sum(ones, dev["edge_src"],
+                              num_segments=l_max + 1)[:l_max]
+    inc = jax.ops.segment_sum(ones, dev["edge_dst"],
+                              num_segments=l_max + 1)[:l_max]
+    return out + inc
+
+
+# total degree: the (sum, i32) wire cell — an integer sum combine ships
+# exact on the quantized backend (lossy_payload is False)
+DEGREE_PROGRAM = GASProgram(
+    name="degree", combine="sum", dtype=jnp.int32,
+    init=lambda dev: jnp.zeros(dev["vert_gid"].shape, jnp.int32),
+    local=_degree_local,
+    apply=lambda total, aux, dev: jnp.where(
+        dev["vert_mask"] & dev["is_master"], total, 0))
+
+
+def _cent_local(value, dev):
+    """In-neighbor sum without degree normalization (A^T x)."""
+    l_max = dev["vert_gid"].shape[0]
+    contrib = _masked_ext(value, dev["vert_mask"],
+                          jnp.zeros((), value.dtype))
+    per_edge = jnp.where(dev["edge_mask"], contrib[dev["edge_src"]], 0.0)
+    return jax.ops.segment_sum(per_edge, dev["edge_dst"],
+                               num_segments=l_max + 1)[:l_max]
+
+
+def _cent_aux(value, dev):
+    """Global L1 mass of the current iterate (masters only)."""
+    m = dev["vert_mask"] & dev["is_master"]
+    return jnp.sum(jnp.where(m, value, 0.0))
+
+
+@lru_cache(maxsize=None)
+def centrality_program(num_vertices: int) -> GASProgram:
+    """Approximate (eigenvector-style) centrality: damped power iteration
+    x ← (1−d)/V + d·(Aᵀx)/‖x‖₁, the L1-normalized Katz/eigenvector hybrid
+    — the normalization rides the engine's global-aux reduction.  (sum,
+    f32): the quantized wire delta-codes it with error feedback."""
+    base = (1.0 - DAMPING) / num_vertices
+
+    def init(dev):
+        return jnp.where(dev["vert_mask"], 1.0 / num_vertices, 0.0)
+
+    def apply(total, norm, dev):
+        new = base + DAMPING * total / jnp.maximum(norm, 1e-30)
+        return jnp.where(dev["vert_mask"] & dev["is_master"], new, 0.0)
+
+    return GASProgram(name="centrality", combine="sum", dtype=jnp.float32,
+                      init=init, local=_cent_local, apply=apply,
+                      aux=_cent_aux)
+
+
+@lru_cache(maxsize=None)
+def ppr_program(num_vertices: int,
+                num_seeds: int | None = None) -> GASProgram:
+    """Personalized pagerank: teleport (and dangling) mass lands on the
+    seed set {gid < num_seeds} instead of uniformly — same local
+    scatter/aux as pagerank, different apply.  (sum, f32) lossy wire."""
+    ns = default_num_seeds(num_vertices) if num_seeds is None else num_seeds
+
+    def init(dev):
+        seeded = dev["vert_mask"] & (dev["vert_gid"] < ns)
+        return jnp.where(seeded, 1.0 / ns, 0.0)
+
+    def apply(total, dangle, dev):
+        seeded = dev["vert_gid"] < ns
+        teleport = jnp.where(seeded,
+                             (1.0 - DAMPING) / ns + DAMPING * dangle / ns,
+                             0.0)
+        return jnp.where(dev["vert_mask"] & dev["is_master"],
+                         DAMPING * total + teleport, 0.0)
+
+    return GASProgram(name="ppr", combine="sum", dtype=jnp.float32,
+                      init=init, local=_local_rank_partial, apply=apply,
+                      aux=_local_dangle)
+
+
+PROGRAM_NAMES = ("pagerank", "cc", "labelprop", "sssp", "bfs", "degree",
+                 "centrality", "ppr")
+
+
+def get_program(name: str, num_vertices: int) -> GASProgram:
+    """Program registry: name → GASProgram with the library defaults
+    (source vertex 0, ~V/256 seeds).  Factories are lru-cached so
+    repeated lookups share one program instance (and its jit cache)."""
+    if name == "pagerank":
+        return pagerank_program(num_vertices)
+    if name == "cc":
+        return CC_PROGRAM
+    if name == "labelprop":
+        return labelprop_program(num_vertices)
+    if name == "sssp":
+        return sssp_program()
+    if name == "bfs":
+        return bfs_program()
+    if name == "degree":
+        return DEGREE_PROGRAM
+    if name == "centrality":
+        return centrality_program(num_vertices)
+    if name == "ppr":
+        return ppr_program(num_vertices)
+    raise ValueError(f"unknown program {name!r}; expected one of "
+                     f"{PROGRAM_NAMES}")
+
+
 # ----------------------------------------------------------- shared body
 
 def _gas_body(program: GASProgram, ex, dev, axis: str | None = None):
@@ -206,9 +438,13 @@ def _stack_dev(layout: PartitionLayout, exchange: str | None = None):
 def _sim_gas(program: GASProgram, dev, iters: int, exchange: str):
     ex = get_exchange(exchange)
     value = jax.vmap(program.init)(dev)
-    state = ex.init_state(dev, program.dtype, program.combine)
-    body = _gas_body(program, ex, dev)
-    value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+    # iters == 0 must return init values without even tracing the loop
+    # body — a trip-count-0 fori_loop still bakes its collectives into
+    # the HLO, which the dry-run byte parser would then count
+    if iters:
+        state = ex.init_state(dev, program.dtype, program.combine)
+        body = _gas_body(program, ex, dev)
+        value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
     return value
 
 
@@ -261,9 +497,10 @@ def shard_map_gas(program: GASProgram, layout: PartitionLayout, mesh: Mesh,
     def run(dev):
         dev = jax.tree_util.tree_map(lambda x: x[0], dev)
         value = program.init(dev)
-        state = ex.init_state(dev, program.dtype, program.combine)
-        body = _gas_body(program, ex, dev, axis)
-        value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+        if iters:
+            state = ex.init_state(dev, program.dtype, program.combine)
+            body = _gas_body(program, ex, dev, axis)
+            value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
         return value[None]
 
     with mesh:
@@ -284,12 +521,136 @@ def shard_map_cc(layout: PartitionLayout, mesh: Mesh, iters: int = 30,
                          exchange=exchange).astype(np.int64)
 
 
-def gas_step_for_dryrun(program: GASProgram, layout: PartitionLayout,
-                        mesh: Mesh, axis: str = "parts", iters: int = 1,
-                        exchange: str = "dense"):
-    """Returns (jitted_fn, example_args) whose .lower() the dry-run compiles
-    — the graph dry-run parses each backend's collective bytes out of the
-    post-SPMD HLO (``launch/dryrun.py --graph``)."""
+# ------------------------------------------------- fused multi-program driver
+
+@dataclass(frozen=True)
+class FusedGAS:
+    """N homogeneous GAS programs executed as one fused iteration over a
+    shared ``PartitionLayout``: per-program local/apply math runs stacked
+    along a leading program axis, and the mirror sync ships **one**
+    collective per phase with all programs' lanes concatenated (per-
+    program scale groups on the quantized wire — see
+    ``repro.dist.halo``'s ``*_multi`` ops).  Programs must share one
+    (combine, dtype) wire cell; hashable so it can be a jit static."""
+    programs: tuple[GASProgram, ...]
+
+    def __post_init__(self):
+        if not self.programs:
+            raise ValueError("FusedGAS needs at least one program")
+        combines = {p.combine for p in self.programs}
+        dtypes = {np.dtype(p.dtype).name for p in self.programs}
+        if len(combines) > 1 or len(dtypes) > 1:
+            raise ValueError(
+                "fused programs must share one (combine, dtype) wire "
+                f"cell; got combines {sorted(combines)} and dtypes "
+                f"{sorted(dtypes)}")
+
+    @property
+    def combine(self) -> str:
+        return self.programs[0].combine
+
+    @property
+    def dtype(self):
+        return self.programs[0].dtype
+
+    @property
+    def name(self) -> str:
+        return "+".join(p.name for p in self.programs)
+
+
+def fuse_programs(programs) -> FusedGAS:
+    """Coerce a GASProgram sequence (or an existing FusedGAS) to FusedGAS."""
+    if isinstance(programs, FusedGAS):
+        return programs
+    return FusedGAS(tuple(programs))
+
+
+def _gas_body_multi(fused: FusedGAS, ex, dev, axis: str | None = None):
+    """One fused GAS iteration over (values, state) where values carry a
+    program axis: (N, L_max) per device, (k, N, L_max) stacked.  The
+    per-program math is a python loop over traced stacks (unrolled at
+    trace time — N is small), but each mirror-sync phase is a single
+    ``*_multi`` exchange call, i.e. one collective for all N programs."""
+    stacked = axis is None
+    programs = fused.programs
+    n = len(programs)
+
+    def global_aux(value):
+        idx = [i for i, p in enumerate(programs) if p.aux is not None]
+        auxes: list = [None] * n
+        if idx:
+            if stacked:
+                per = jnp.stack([
+                    jnp.sum(jax.vmap(programs[i].aux)(value[:, i], dev))
+                    for i in idx])
+            else:
+                per = jax.lax.psum(
+                    jnp.stack([programs[i].aux(value[i], dev)
+                               for i in idx]), axis)
+            for j, i in enumerate(idx):
+                auxes[i] = per[j]
+        return auxes
+
+    def body(_, carry):
+        value, state = carry
+        auxes = global_aux(value)
+        if stacked:
+            partials = jnp.stack(
+                [jax.vmap(programs[i].local)(value[:, i], dev)
+                 for i in range(n)], axis=1)
+            total, state = ex.reduce_stacked_multi(partials, dev,
+                                                   fused.combine, state)
+            new_master = jnp.stack(
+                [jax.vmap(lambda t, d, i=i: programs[i].apply(
+                    t, auxes[i], d))(total[:, i], dev)
+                 for i in range(n)], axis=1)
+            value, state = ex.broadcast_stacked_multi(new_master, dev,
+                                                      fused.combine, state)
+        else:
+            partials = jnp.stack([programs[i].local(value[i], dev)
+                                  for i in range(n)])
+            total, state = ex.reduce_to_masters_multi(partials, dev,
+                                                      fused.combine, state)
+            new_master = jnp.stack(
+                [programs[i].apply(total[i], auxes[i], dev)
+                 for i in range(n)])
+            value, state = ex.broadcast_from_masters_multi(
+                new_master, dev, fused.combine, state)
+        return value, state
+
+    return body
+
+
+@partial(jax.jit, static_argnames=("fused", "iters", "exchange"))
+def _sim_gas_many(fused: FusedGAS, dev, iters: int, exchange: str):
+    ex = get_exchange(exchange)
+    value = jnp.stack([jax.vmap(p.init)(dev) for p in fused.programs],
+                      axis=1)
+    if iters:
+        state = ex.init_state_multi(dev, fused.dtype, fused.combine,
+                                    len(fused.programs))
+        body = _gas_body_multi(fused, ex, dev)
+        value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+    return value
+
+
+def simulate_gas_many(programs, layout: PartitionLayout, iters: int = 30,
+                      exchange: str = "dense") -> list[np.ndarray]:
+    """Stacked one-device driver for a fused program bundle; returns one
+    dense (V,) master-value array per program, in bundle order."""
+    fused = fuse_programs(programs)
+    dev = _stack_dev(layout, exchange)
+    values = _sim_gas_many(fused, dev, iters, exchange)
+    return [_collect_master_values(layout, values[:, i])
+            for i in range(len(fused.programs))]
+
+
+def shard_map_gas_many(programs, layout: PartitionLayout, mesh: Mesh,
+                       iters: int = 30, axis: str = "parts",
+                       exchange: str = "dense") -> list[np.ndarray]:
+    """Production fused path: N programs per device along ``axis``, one
+    mirror-sync collective per phase for the whole bundle."""
+    fused = fuse_programs(programs)
     dev = _stack_dev(layout, exchange)
     ex = get_exchange(exchange, axis)
     spec = P(axis)
@@ -297,12 +658,60 @@ def gas_step_for_dryrun(program: GASProgram, layout: PartitionLayout,
     @partial(shard_map, mesh=mesh,
              in_specs=(jax.tree_util.tree_map(lambda _: spec, dev),),
              out_specs=spec)
+    def run(dev):
+        dev = jax.tree_util.tree_map(lambda x: x[0], dev)
+        value = jnp.stack([p.init(dev) for p in fused.programs])
+        if iters:
+            state = ex.init_state_multi(dev, fused.dtype, fused.combine,
+                                        len(fused.programs))
+            body = _gas_body_multi(fused, ex, dev, axis)
+            value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+        return value[None]
+
+    with mesh:
+        values = run(dev)
+    return [_collect_master_values(layout, values[:, i])
+            for i in range(len(fused.programs))]
+
+
+def gas_step_for_dryrun(program, layout: PartitionLayout,
+                        mesh: Mesh, axis: str = "parts", iters: int = 1,
+                        exchange: str = "dense"):
+    """Returns (jitted_fn, example_args) whose .lower() the dry-run compiles
+    — the graph dry-run parses each backend's collective bytes out of the
+    post-SPMD HLO (``launch/dryrun.py --graph``).
+
+    ``program`` may be a single ``GASProgram``, or a program sequence /
+    ``FusedGAS``, in which case the compiled step is the fused
+    multi-program iteration (one collective per phase for the bundle) so
+    the dry-run can compare fused vs. separate wire bytes."""
+    dev = _stack_dev(layout, exchange)
+    ex = get_exchange(exchange, axis)
+    spec = P(axis)
+    fused = (None if isinstance(program, GASProgram)
+             else fuse_programs(program))
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(jax.tree_util.tree_map(lambda _: spec, dev),),
+             out_specs=spec)
     def step(dev):
         dev = jax.tree_util.tree_map(lambda x: x[0], dev)
-        value = program.init(dev)
-        state = ex.init_state(dev, program.dtype, program.combine)
-        body = _gas_body(program, ex, dev, axis)
-        value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
+        if fused is None:
+            value = program.init(dev)
+            if iters:
+                state = ex.init_state(dev, program.dtype, program.combine)
+                body = _gas_body(program, ex, dev, axis)
+                value, _ = jax.lax.fori_loop(0, iters, body,
+                                             (value, state))
+        else:
+            value = jnp.stack([p.init(dev) for p in fused.programs])
+            if iters:
+                state = ex.init_state_multi(dev, fused.dtype,
+                                            fused.combine,
+                                            len(fused.programs))
+                body = _gas_body_multi(fused, ex, dev, axis)
+                value, _ = jax.lax.fori_loop(0, iters, body,
+                                             (value, state))
         return value[None]
 
     return jax.jit(step), (dev,)
@@ -343,3 +752,99 @@ def reference_cc(src, dst, num_vertices) -> np.ndarray:
     mins = np.full(comp.max() + 1, num_vertices, dtype=np.int64)
     np.minimum.at(mins, comp, np.arange(num_vertices))
     return mins[comp]
+
+
+def _reference_relax(src, dst, num_vertices, iters, source, weights):
+    """Shared Bellman-Ford oracle: iterates the exact per-round relaxation
+    the engine runs, so it matches at any iteration count (converged or
+    not) — unreachable vertices keep CC_SENTINEL."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    dist = np.full(num_vertices, CC_SENTINEL, dtype=np.int64)
+    dist[source] = 0
+    for _ in range(iters):
+        du = dist[src]
+        cand = np.where(du < CC_SENTINEL,
+                        np.minimum(du, CC_SENTINEL - 64) + weights,
+                        CC_SENTINEL)
+        new = dist.copy()
+        np.minimum.at(new, dst, cand)
+        new[source] = 0
+        dist = new
+    return dist
+
+
+def reference_sssp(src, dst, num_vertices, iters: int = 40,
+                   source: int = DEFAULT_SOURCE) -> np.ndarray:
+    """SSSP under the deterministic gid-hash weights w(u,v)=1+(3u+7v)%11."""
+    s = np.asarray(src, dtype=np.int64)
+    d = np.asarray(dst, dtype=np.int64)
+    w = 1 + (3 * s + 7 * d) % 11
+    return _reference_relax(s, d, num_vertices, iters, source, w)
+
+
+def reference_bfs(src, dst, num_vertices, iters: int = 40,
+                  source: int = DEFAULT_SOURCE) -> np.ndarray:
+    """BFS levels from ``source`` over directed edges."""
+    s = np.asarray(src, dtype=np.int64)
+    return _reference_relax(s, dst, num_vertices, iters, source,
+                            np.ones(len(s), dtype=np.int64))
+
+
+def reference_labelprop(src, dst, num_vertices, iters: int = 40,
+                        num_seeds: int | None = None) -> np.ndarray:
+    """Seeded directed min-label propagation; non-seeds that no seed ever
+    reaches keep CC_SENTINEL."""
+    ns = default_num_seeds(num_vertices) if num_seeds is None else num_seeds
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    lab = np.full(num_vertices, CC_SENTINEL, dtype=np.int64)
+    lab[:ns] = np.arange(ns)
+    for _ in range(iters):
+        new = lab.copy()
+        np.minimum.at(new, dst, lab[src])
+        new[:ns] = np.arange(ns)
+        lab = new
+    return lab
+
+
+def reference_degree(src, dst, num_vertices) -> np.ndarray:
+    """Total (in+out) degree, counting duplicate edges like the engine."""
+    deg = np.zeros(num_vertices, dtype=np.int64)
+    np.add.at(deg, np.asarray(src, dtype=np.int64), 1)
+    np.add.at(deg, np.asarray(dst, dtype=np.int64), 1)
+    return deg
+
+
+def reference_centrality(src, dst, num_vertices,
+                         iters: int = 30) -> np.ndarray:
+    """L1-normalized damped power iteration x ← (1−d)/V + d·(Aᵀx)/‖x‖₁."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    x = np.full(num_vertices, 1.0 / num_vertices)
+    base = (1.0 - DAMPING) / num_vertices
+    for _ in range(iters):
+        s = np.zeros(num_vertices)
+        np.add.at(s, dst, x[src])
+        x = base + DAMPING * s / max(x.sum(), 1e-30)
+    return x
+
+
+def reference_ppr(src, dst, num_vertices, iters: int = 30,
+                  num_seeds: int | None = None) -> np.ndarray:
+    """Personalized pagerank with teleport + dangling mass on the seeds."""
+    ns = default_num_seeds(num_vertices) if num_seeds is None else num_seeds
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    outdeg = np.zeros(num_vertices, dtype=np.int64)
+    np.add.at(outdeg, src, 1)
+    e = np.zeros(num_vertices)
+    e[:ns] = 1.0 / ns
+    rank = e.copy()
+    for _ in range(iters):
+        contrib = np.where(outdeg > 0, rank / np.maximum(outdeg, 1), 0.0)
+        s = np.zeros(num_vertices)
+        np.add.at(s, dst, contrib[src])
+        dangle = rank[outdeg == 0].sum()
+        rank = DAMPING * s + (1.0 - DAMPING) * e + DAMPING * dangle * e
+    return rank

@@ -108,6 +108,48 @@ class PartitionLayout:
         return 2 * self.k * (self.k - 1) * (
             self.h_max * code_bytes + scale_bytes)
 
+    # the fused quantized wire ships fp16 scales over 8 subgroups per
+    # (destination, program) lane row — 16 B/row (halo._NUM_SCALE_GROUPS)
+    FUSED_SCALE_BYTES = 16
+
+    def comm_bytes_fused_quantized(self, n_programs: int) -> int:
+        """Fused multi-program quantized wire (``repro.dist.halo``
+        ``*_multi`` on the quantized backend): N lossy programs share one
+        all_to_all per phase whose codes are int4 nibble-packed two per
+        byte, with fp16 scales over 8 subgroups per (destination,
+        program) lane row (H_max is padded to a multiple of 8, so rows
+        split evenly and the nibble count is even) — (H/2 + 16)/(H + 4)
+        ≈ 0.55× the bytes of N separate int8 quantized steps."""
+        return 2 * self.k * (self.k - 1) * n_programs * (
+            self.h_max // 2 + self.FUSED_SCALE_BYTES)
+
+    def comm_bytes_exchange(self, exchange: str, *, lossy: bool = True,
+                            value_bytes: int = 4) -> int:
+        """One program's modelled bytes/iter on ``exchange``.  ``lossy``
+        is ``halo.lossy_payload(program.combine, program.dtype)`` —
+        min/int programs ship the exact full-width halo payload on the
+        quantized backend."""
+        if exchange == "dense":
+            return self.comm_bytes_mirror_sync(value_bytes)
+        if exchange == "quantized" and lossy:
+            return self.comm_bytes_halo_quantized()
+        if exchange in ("halo", "quantized"):
+            return self.comm_bytes_halo(value_bytes)
+        raise ValueError(
+            f"unknown exchange {exchange!r}; expected one of "
+            f"{sorted(self.EXCHANGE_TABLES)}")
+
+    def comm_bytes_fused(self, n_programs: int, exchange: str, *,
+                         lossy: bool = True, value_bytes: int = 4) -> int:
+        """Modelled bytes/iter for N homogeneous programs run as one
+        fused step on ``exchange``.  Exact backends ship the concatenated
+        payload (N × the single-program volume); the quantized backend
+        switches to the int4 fused wire format for lossy bundles."""
+        if exchange == "quantized" and lossy:
+            return self.comm_bytes_fused_quantized(n_programs)
+        return n_programs * self.comm_bytes_exchange(
+            exchange, lossy=lossy, value_bytes=value_bytes)
+
     def comm_bytes_ideal(self, value_bytes: int = 4) -> int:
         """Ragged lower bound: every mirror value moves exactly once per
         phase — 2·mirrors·bytes per iteration."""

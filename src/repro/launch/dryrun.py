@@ -299,6 +299,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
 
 
 GRAPH_EXCHANGES = ("dense", "halo", "quantized")
+# the fused-vs-separate CI gate compiles this homogeneous (f32, sum)
+# bundle as ONE fused step and compares its wire bytes against the sum
+# of the three separate quantized steps (threshold FUSED_GATE_RATIO)
+FUSED_BUNDLE = ("pagerank", "ppr", "centrality")
+FUSED_GATE_RATIO = 0.6
 
 
 def _graph_comm_model(lay, exchange: str, lossy: bool) -> int:
@@ -313,27 +318,19 @@ def _graph_comm_model(lay, exchange: str, lossy: bool) -> int:
     return lay.comm_bytes_halo()
 
 
-def _graph_self_lane_bytes(lay, exchange: str, lossy: bool) -> int:
-    """Per-phase, per-device bytes of the all_to_all self lane (which the
-    HLO output shape counts but never crosses the wire).  One self lane
-    carries exactly one lane group's payload, so it is derived from the
-    layout's comm model (2 phases × k·(k−1) lane groups) rather than
-    restating the wire-format constants."""
-    if exchange == "dense":
-        return 0
-    return _graph_comm_model(lay, exchange, lossy) // (
-        2 * lay.k * (lay.k - 1))
-
-
 def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                    iters: int = 1, tag: str = "") -> list[dict]:
     """GAS-engine dry-run: lower one GAS step per (program × exchange
-    backend) on a k-device mesh — pagerank (fp32 sum) and connected
-    components (int32 min) across dense / halo / quantized — and parse the
-    measured collective bytes out of the post-SPMD HLO, next to the
-    layout's modelled volumes.  One JSON record per cell; the full table
-    also lands in ``results/BENCH_dryrun.json`` (the CI ``graph-dryrun``
-    job's artifact and regression gate).
+    backend) on a k-device mesh — the full ``repro.graph`` program
+    library (pagerank/cc/labelprop/sssp/bfs/degree/centrality/ppr)
+    across dense / halo / quantized — and parse the measured collective
+    bytes out of the post-SPMD HLO, next to the layout's modelled
+    volumes.  A final fused cell compiles the ``FUSED_BUNDLE`` programs
+    as ONE multi-program step (single exchange per phase, int4 fused
+    wire) so ``check_graph_ordering`` can gate fused < 0.6 × Σ separate.
+    One JSON record per cell; the full table also lands in
+    ``results/BENCH_dryrun.json`` (the CI ``graph-dryrun`` job's
+    artifact and regression gate).
 
     HLO bytes are per-device; ×k (minus the all_to_all self lane, which
     never crosses the wire) gives the fleet wire volume comparable to
@@ -346,6 +343,7 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
     """
     from repro.core import CLUGPConfig, web_graph
     from repro.dist.halo import lossy_payload
+    from repro.graph import PROGRAM_NAMES
     from repro.launch.mesh import make_graph_mesh
     from repro.session import GraphSession, SessionConfig, resolve_program
 
@@ -354,52 +352,58 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
     sess.partition(g.src, g.dst, g.num_vertices).layout()
     lay = sess.partition_layout
     mesh = make_graph_mesh(k)
-    programs = tuple(
-        (name, resolve_program(name, g.num_vertices))
-        for name in ("pagerank", "cc"))
+    base = {"bench": "graph_dryrun", "k": k, "scale": scale,
+            "iters": iters, "num_vertices": g.num_vertices,
+            "num_edges": g.num_edges, "l_max": lay.l_max,
+            "h_max": lay.h_max, "mirrors": lay.mirrors_total,
+            "comm_bytes_ideal": lay.comm_bytes_ideal()}
+
+    def compile_cell(rec, step_arg, exchange):
+        t0 = time.time()
+        try:
+            jitted, args = sess.dryrun_step(step_arg, mesh=mesh,
+                                            iters=iters,
+                                            exchange=exchange)
+            compiled = jitted.lower(*args).compile()
+            coll = collective_bytes(compiled.as_text())
+            total = coll["total"] * k
+            # collectives sit once in the fori_loop body, so the HLO
+            # count (and the self-lane correction) is per iteration
+            # whatever ``iters`` is.  The all_to_all self lane (counted
+            # by the HLO output shape, never on the wire) carries one
+            # lane group's payload: model / (2 phases × k·(k−1) groups)
+            # — which generalizes to the fused cell's N-program rows.
+            self_lane = (rec["comm_bytes_model"] // (2 * k * (k - 1))
+                         if exchange != "dense" else 0)
+            wire = total - 2 * k * self_lane
+            rec.update({
+                "status": "ok",
+                "compile_s": round(time.time() - t0, 1),
+                "collective_bytes_per_device": coll,
+                "collective_bytes_total": total,
+                "collective_bytes_wire": wire,
+            })
+            print(f"[graph × {rec['program']} × {exchange}] OK  "
+                  f"hlo={wire:.3e}B/iter (fleet wire)  "
+                  f"model={rec['comm_bytes_model']:.3e}B  "
+                  f"ideal={rec['comm_bytes_ideal']:.3e}B")
+        except Exception as e:  # noqa: BLE001
+            rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+            print(f"[graph × {rec['program']} × {exchange}] FAIL: {e}",
+                  file=sys.stderr)
+        return rec
+
     recs = []
-    for pname, prog in programs:
+    for pname in PROGRAM_NAMES:
+        prog = resolve_program(pname, g.num_vertices)
         lossy = lossy_payload(prog.combine, prog.dtype)
         for exchange in GRAPH_EXCHANGES:
-            rec = {"bench": "graph_dryrun", "program": pname,
-                   "exchange": exchange, "k": k, "scale": scale,
-                   "iters": iters, "num_vertices": g.num_vertices,
-                   "num_edges": g.num_edges, "l_max": lay.l_max,
-                   "h_max": lay.h_max, "mirrors": lay.mirrors_total,
-                   "lossy_payload": lossy,
-                   "comm_bytes_ideal": lay.comm_bytes_ideal(),
+            rec = {**base, "program": pname, "exchange": exchange,
+                   "fused": False, "lossy_payload": lossy,
                    "comm_bytes_model": _graph_comm_model(lay, exchange,
                                                          lossy)}
-            t0 = time.time()
-            try:
-                jitted, args = sess.dryrun_step(pname, mesh=mesh,
-                                                iters=iters,
-                                                exchange=exchange)
-                compiled = jitted.lower(*args).compile()
-                coll = collective_bytes(compiled.as_text())
-                total = coll["total"] * k
-                # collectives sit once in the fori_loop body, so the HLO
-                # count (and the self-lane correction) is per iteration
-                # whatever ``iters`` is
-                wire = total - 2 * k * _graph_self_lane_bytes(lay, exchange,
-                                                              lossy)
-                rec.update({
-                    "status": "ok",
-                    "compile_s": round(time.time() - t0, 1),
-                    "collective_bytes_per_device": coll,
-                    "collective_bytes_total": total,
-                    "collective_bytes_wire": wire,
-                })
-                print(f"[graph × {pname} × {exchange}] OK  "
-                      f"hlo={wire:.3e}B/iter (fleet wire)  "
-                      f"model={rec['comm_bytes_model']:.3e}B  "
-                      f"ideal={rec['comm_bytes_ideal']:.3e}B")
-            except Exception as e:  # noqa: BLE001
-                rec["status"] = f"FAIL: {type(e).__name__}: {e}"
-                rec["traceback"] = traceback.format_exc()[-2000:]
-                print(f"[graph × {pname} × {exchange}] FAIL: {e}",
-                      file=sys.stderr)
-            recs.append(rec)
+            recs.append(compile_cell(rec, pname, exchange))
         ok = {r["exchange"]: r for r in recs
               if r["program"] == pname and r.get("status") == "ok"}
         if len(ok) == len(GRAPH_EXCHANGES):
@@ -410,6 +414,27 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                   f"halo→quantized {q / max(h, 1):.3f}×  "
                   f"(ideal/dense = "
                   f"{ok['dense']['comm_bytes_ideal'] / max(d, 1):.3f})")
+
+    # the fused cell: FUSED_BUNDLE as ONE multi-program quantized step
+    bundle = [resolve_program(p, g.num_vertices) for p in FUSED_BUNDLE]
+    lossy = lossy_payload(bundle[0].combine, bundle[0].dtype)
+    rec = {**base, "program": "+".join(FUSED_BUNDLE),
+           "exchange": "quantized", "fused": True,
+           "fused_programs": list(FUSED_BUNDLE), "lossy_payload": lossy,
+           "comm_bytes_model": lay.comm_bytes_fused(
+               len(bundle), "quantized", lossy=lossy)}
+    rec = compile_cell(rec, list(FUSED_BUNDLE), "quantized")
+    recs.append(rec)
+    sep = [r for r in recs
+           if r["program"] in FUSED_BUNDLE and r["exchange"] == "quantized"
+           and r.get("status") == "ok"]
+    if rec.get("status") == "ok" and len(sep) == len(FUSED_BUNDLE):
+        total_sep = sum(r["collective_bytes_wire"] for r in sep)
+        print(f"  fused {rec['program']}: "
+              f"{rec['collective_bytes_wire']:.3e}B vs separate "
+              f"{total_sep:.3e}B → "
+              f"{rec['collective_bytes_wire'] / max(total_sep, 1):.3f}× "
+              f"(gate < {FUSED_GATE_RATIO})")
     out_dir.mkdir(parents=True, exist_ok=True)
     fname = out_dir / (f"graph__gas__k{k}"
                        f"{('__' + tag) if tag else ''}.json")
@@ -423,16 +448,20 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
 
 
 def check_graph_ordering(recs: list[dict]) -> list[str]:
-    """The CI regression gate on the paper's headline quantity: per
-    program, measured wire bytes/iter must order quantized < halo < dense.
-    Programs whose quantized cell ships an exact payload (min/int — the
-    record's ``lossy_payload`` flag, derived from the program spec) allow
-    quantized == halo.  Returns the list of violations (empty == pass)."""
+    """The CI regression gate on the paper's headline quantity: **per
+    program**, measured wire bytes/iter must order quantized < halo <
+    dense.  Programs whose quantized cell ships an exact payload (min/int
+    — the record's ``lossy_payload`` flag, derived from the program spec)
+    allow quantized == halo.  Fused rows (``fused: true``) are excluded
+    from the per-program ordering and instead gate the fused win: the
+    fused step's wire bytes must be < ``FUSED_GATE_RATIO`` × the sum of
+    its bundle programs' separate quantized steps.  Returns the list of
+    violations (empty == pass)."""
     msgs = [f"{r.get('program', '?')}/{r.get('exchange', '?')}: "
             f"{r.get('status')}"
             for r in recs if r.get("status") != "ok"]
     by = {(r["program"], r["exchange"]): r
-          for r in recs if r.get("status") == "ok"}
+          for r in recs if r.get("status") == "ok" and not r.get("fused")}
     for prog in sorted({p for p, _ in by}):
         cells = [by.get((prog, e)) for e in GRAPH_EXCHANGES]
         if None in cells:
@@ -445,6 +474,22 @@ def check_graph_ordering(recs: list[dict]) -> list[str]:
                 msgs.append(f"{prog}: quantized bytes/iter {q} ≥ halo {h}")
         elif q > h:
             msgs.append(f"{prog}: quantized bytes/iter {q} > halo {h}")
+    for r in recs:
+        if not r.get("fused") or r.get("status") != "ok":
+            continue
+        bundle = r.get("fused_programs") or r["program"].split("+")
+        sep = [by.get((p, "quantized")) for p in bundle]
+        if None in sep:
+            missing = [p for p, c in zip(bundle, sep) if c is None]
+            msgs.append(f"{r['program']}: fused gate needs separate "
+                        f"quantized cells for {missing}")
+            continue
+        total_sep = sum(c["collective_bytes_wire"] for c in sep)
+        fused_wire = r["collective_bytes_wire"]
+        if fused_wire >= FUSED_GATE_RATIO * total_sep:
+            msgs.append(
+                f"{r['program']}: fused bytes/iter {fused_wire} ≥ "
+                f"{FUSED_GATE_RATIO} × Σ separate ({total_sep})")
     return msgs
 
 
@@ -536,17 +581,20 @@ def main():
     ap.add_argument("--probe", action="store_true",
                     help="per-layer cost probes (single-pod only)")
     ap.add_argument("--graph", action="store_true",
-                    help="GAS-engine cells: compile one pagerank + one CC "
-                         "step per exchange backend (dense/halo/"
-                         "quantized), report measured collective bytes vs "
-                         "the layout's modelled volumes, and write "
+                    help="GAS-engine cells: compile one step per (program "
+                         "× exchange backend) for the full program "
+                         "library plus the fused 3-program bundle, report "
+                         "measured collective bytes vs the layout's "
+                         "modelled volumes, and write "
                          "results/BENCH_dryrun.json")
     ap.add_argument("--graph-scale", type=int, default=10)
     ap.add_argument("--graph-k", type=int, default=8)
     ap.add_argument("--check", action="store_true",
                     help="with --graph: exit 1 unless measured wire bytes "
-                         "order quantized < halo < dense per program (CC "
-                         "allows quantized == halo — exact int32 payload)")
+                         "order quantized < halo < dense per program "
+                         "(exact int payloads allow quantized == halo) "
+                         "AND the fused bundle ships < 0.6× the bytes of "
+                         "its separate quantized steps")
     ap.add_argument("--compress-grads", action="store_true",
                     help="train cells: int8 gradient quantization; also "
                          "compiles the uncompressed step and prints the "
@@ -572,7 +620,8 @@ def main():
                 print(f"collective-bytes gate: {m}", file=sys.stderr)
             if not msgs:
                 print("collective-bytes gate: quantized < halo < dense "
-                      "holds for every program")
+                      "holds for every program, and the fused bundle "
+                      f"ships < {FUSED_GATE_RATIO}× its separate steps")
             sys.exit(1 if msgs else 0)
         sys.exit(1 if n_fail else 0)
     archs = ARCHS if (args.all or not args.arch) else [args.arch]

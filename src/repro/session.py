@@ -21,10 +21,14 @@ run is reproducible from a JSON blob:
 ``partition`` accepts any backend (`np`/`jit`/`sharded`, `nodes` for the
 §III-C stream split); ``with_partition`` adopts an external edge→partition
 assignment (baselines) so the layout/engine/accounting half of the session
-works on it; ``run`` takes a program name (``"pagerank"``/``"cc"``) or any
-``GASProgram`` and simulates on one device (``mesh=None``) or shard_maps
-one partition per device; ``dryrun_step`` hands the compile-only cell to
-``launch.dryrun --graph``.
+works on it; ``run`` takes a program name (any of ``PROGRAMS`` — the
+``repro.graph.engine`` library: pagerank/cc/labelprop/sssp/bfs/degree/
+centrality/ppr) or any ``GASProgram`` and simulates on one device
+(``mesh=None``) or shard_maps one partition per device; ``run_many``
+executes N homogeneous programs as one fused loop with a single mirror
+exchange per phase; ``dryrun_step`` hands the compile-only cell (single
+or fused) to ``launch.dryrun --graph``; ``comm_bytes_programs`` /
+``comm_bytes_fused`` are the per-program byte tables the CI gate checks.
 """
 from __future__ import annotations
 
@@ -37,22 +41,22 @@ import numpy as np
 from .core import metrics
 from .core.partitioner import BACKENDS, partition
 from .core.pipeline import CLUGPConfig, CLUGPResult
-from .graph import (CC_PROGRAM, GASProgram, PartitionLayout, build_layout,
-                    gas_step_for_dryrun, pagerank_program, shard_map_gas,
-                    simulate_gas)
+from .dist.halo import lossy_payload
+from .graph import (GASProgram, PROGRAM_NAMES, PartitionLayout,
+                    build_layout, fuse_programs, gas_step_for_dryrun,
+                    get_program, shard_map_gas, shard_map_gas_many,
+                    simulate_gas, simulate_gas_many)
 
 EXCHANGES = ("dense", "halo", "quantized")
-PROGRAMS = ("pagerank", "cc")
+PROGRAMS = PROGRAM_NAMES
 
 
 def resolve_program(program, num_vertices: int) -> GASProgram:
-    """Name → built-in GASProgram (a GASProgram passes through)."""
+    """Name → library GASProgram (a GASProgram passes through)."""
     if isinstance(program, GASProgram):
         return program
-    if program == "pagerank":
-        return pagerank_program(num_vertices)
-    if program == "cc":
-        return CC_PROGRAM
+    if program in PROGRAMS:
+        return get_program(program, num_vertices)
     raise ValueError(f"unknown program {program!r}; expected a GASProgram "
                      f"or one of {PROGRAMS}")
 
@@ -206,6 +210,31 @@ class GraphSession:
                 "dense_gather": lay.comm_bytes_mirror_sync(),
                 "allreduce": lay.comm_bytes_dense()}
 
+    def comm_bytes_programs(self, programs=PROGRAMS) -> dict:
+        """Per-program modelled bytes/iter: {program: {exchange: bytes}}.
+        Int/min programs ship exact on the quantized backend, so their
+        quantized entry equals halo; lossy fp32-sum programs get the int8
+        delta wire (the per-program rows the dry-run gate asserts)."""
+        lay = self.partition_layout
+        table = {}
+        for p in programs:
+            prog = resolve_program(p, self._num_vertices)
+            lossy = lossy_payload(prog.combine, prog.dtype)
+            table[prog.name] = {ex: lay.comm_bytes_exchange(ex, lossy=lossy)
+                                for ex in EXCHANGES}
+        return table
+
+    def comm_bytes_fused(self, programs, exchange: str | None = None) -> int:
+        """Modelled bytes/iter for ``programs`` run as one fused step
+        (single collective per phase; int4 fused wire when lossy)."""
+        lay = self.partition_layout
+        fused = fuse_programs(
+            [resolve_program(p, self._num_vertices) for p in programs])
+        lossy = lossy_payload(fused.combine, fused.dtype)
+        return lay.comm_bytes_fused(len(fused.programs),
+                                    exchange or self.cfg.exchange,
+                                    lossy=lossy)
+
     # ------------------------------------------------------------- GAS
 
     def run(self, program="pagerank", *, iters: int | None = None,
@@ -226,14 +255,41 @@ class GraphSession:
             out = shard_map_gas(prog, lay, mesh, iters=iters, axis=axis,
                                 exchange=exchange)
         if np.issubdtype(out.dtype, np.integer):
-            out = out.astype(np.int64)     # label programs (CC)
+            out = out.astype(np.int64)     # label/distance programs
         return out
+
+    def run_many(self, programs, *, iters: int | None = None,
+                 exchange: str | None = None, mesh=None,
+                 axis: str = "parts") -> list[np.ndarray]:
+        """Run N homogeneous programs as one fused GAS loop — a single
+        mirror-sync collective per phase carries every program's lanes
+        (``repro.graph.engine.FusedGAS``).  Returns one dense (V,) array
+        per program, in input order."""
+        lay = self.partition_layout
+        progs = [resolve_program(p, self._num_vertices) for p in programs]
+        iters = self.cfg.iters if iters is None else iters
+        exchange = exchange or self.cfg.exchange
+        if mesh is None:
+            outs = simulate_gas_many(progs, lay, iters=iters,
+                                     exchange=exchange)
+        else:
+            outs = shard_map_gas_many(progs, lay, mesh, iters=iters,
+                                      axis=axis, exchange=exchange)
+        return [o.astype(np.int64)
+                if np.issubdtype(o.dtype, np.integer) else o
+                for o in outs]
 
     def dryrun_step(self, program="pagerank", *, mesh, iters: int = 1,
                     exchange: str | None = None, axis: str = "parts"):
         """(jitted_fn, example_args) for one shard_map GAS step — what
-        ``launch.dryrun --graph`` lowers to parse collective bytes."""
+        ``launch.dryrun --graph`` lowers to parse collective bytes.
+        ``program`` may be a name/GASProgram or a sequence of them; a
+        sequence compiles the fused multi-program step."""
         lay = self.partition_layout
-        prog = resolve_program(program, self._num_vertices)
+        if isinstance(program, (list, tuple)):
+            prog = [resolve_program(p, self._num_vertices)
+                    for p in program]
+        else:
+            prog = resolve_program(program, self._num_vertices)
         return gas_step_for_dryrun(prog, lay, mesh, axis=axis, iters=iters,
                                    exchange=exchange or self.cfg.exchange)

@@ -52,3 +52,18 @@ def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600):
 @pytest.fixture
 def multidevice():
     return run_multidevice
+
+
+def pytest_collection_modifyitems(config, items):
+    """`-m "not multidevice"` vs `-m multidevice` must partition the
+    suite (the CI tests / tests-multidevice job split): any test that
+    drives the subprocess runner (the ``multidevice`` fixture) without
+    carrying the ``multidevice`` marker aborts collection."""
+    unmarked = [item.nodeid for item in items
+                if "multidevice" in getattr(item, "fixturenames", ())
+                and item.get_closest_marker("multidevice") is None]
+    if unmarked:
+        raise pytest.UsageError(
+            "subprocess multidevice tests missing the @pytest.mark."
+            "multidevice marker (the CI job split would silently skip "
+            "them): " + ", ".join(unmarked))

@@ -1,7 +1,9 @@
 """Multi-device (8 virtual CPU devices) integration tests, run in
-subprocesses: shard_map graph engine, SP decode, pipeline parallelism,
-compressed psum, sharded train step."""
+subprocesses: shard_map graph engine (single and fused multi-program),
+SP decode, pipeline parallelism, compressed psum, sharded train step."""
 import pytest
+
+pytestmark = pytest.mark.multidevice
 
 
 def test_shard_map_pagerank_matches_reference(multidevice):
@@ -98,6 +100,68 @@ def test_shard_map_cc_and_quantized_match_reference(multidevice):
     assert not any(line.strip().lstrip('%').startswith('all-gather')
                    for line in coll), 'quantized must not all-gather'
     print('cc + quantized shard_map ok')
+    """)
+
+
+def test_shard_map_fused_many_matches_simulation(multidevice):
+    """shard_map_gas_many ≡ simulate_gas_many on 8 real devices for a
+    fused f32 bundle (within float reduction-order noise: the global-aux
+    psum on the mesh associates differently than the stacked vmap+sum),
+    the fused quantized step lowers to one all-to-all pair per phase
+    (not one per program), and iters=0 returns init values unchanged."""
+    multidevice("""
+    import numpy as np
+    from repro.core import web_graph, clugp_partition, CLUGPConfig
+    from repro.graph import (build_layout, gas_step_for_dryrun, get_program,
+                             reference_centrality, reference_pagerank,
+                             reference_ppr, shard_map_gas_many,
+                             simulate_gas_many)
+    from repro.launch.mesh import make_graph_mesh
+
+    g = web_graph(scale=10, edge_factor=6, seed=3)
+    res = clugp_partition(g.src, g.dst, g.num_vertices,
+                          CLUGPConfig.optimized(8))
+    lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, 8)
+    mesh = make_graph_mesh(8)
+    names = ('pagerank', 'ppr', 'centrality')
+    progs = [get_program(p, g.num_vertices) for p in names]
+    refs = {
+        'pagerank': reference_pagerank(g.src, g.dst, g.num_vertices, 30),
+        'ppr': reference_ppr(g.src, g.dst, g.num_vertices, iters=30),
+        'centrality': reference_centrality(g.src, g.dst, g.num_vertices,
+                                           iters=30),
+    }
+    for exchange in ('dense', 'halo', 'quantized'):
+        sim = simulate_gas_many(progs, lay, iters=30, exchange=exchange)
+        sm = shard_map_gas_many(progs, lay, mesh, iters=30,
+                                exchange=exchange)
+        # the EF quantizer amplifies reduction-order noise (a 1-ulp aux
+        # difference can flip an int4 code), so sim↔shard_map is only as
+        # tight as the wire itself under 'quantized'
+        tol = 5e-4 if exchange == 'quantized' else 1e-5
+        for name, a, b in zip(names, sim, sm):
+            assert np.abs(a - b).max() < tol, (exchange, name)
+            assert np.abs(a - refs[name]).max() < tol, (exchange, name)
+            assert np.abs(b - refs[name]).max() < tol, (exchange, name)
+
+    # one collective per phase for the whole bundle: the fused quantized
+    # step ships exactly 2 all-to-alls per phase (packed int4 codes +
+    # fp16 scales) x 2 phases (reduce + broadcast) = 4 all-to-all ops
+    # total, regardless of bundle width, and never all-gathers
+    jitted, args = gas_step_for_dryrun(progs, lay, mesh,
+                                       exchange='quantized')
+    hlo = jitted.lower(*args).compile().as_text()
+    lhs = [line.split(' = ')[0] for line in hlo.splitlines()
+           if ' = ' in line]
+    n_a2a = sum('all-to-all' in h for h in lhs)
+    assert n_a2a == 4, n_a2a
+    assert not any('all-gather' in h for h in lhs)
+
+    z = shard_map_gas_many(progs, lay, mesh, iters=0, exchange='halo')
+    V = g.num_vertices
+    np.testing.assert_array_equal(
+        z[0], np.full(V, np.float32(1.0 / V), np.float32))
+    print('fused shard_map ok')
     """)
 
 

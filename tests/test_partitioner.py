@@ -241,6 +241,7 @@ print("SHARDED_OK", r_sh.stats["rf"])
 """
 
 
+@pytest.mark.multidevice
 def test_sharded_backend_multidevice(multidevice):
     out = multidevice(SHARDED_CODE, n_devices=8)
     assert "SHARDED_OK" in out

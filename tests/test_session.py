@@ -115,6 +115,36 @@ def test_comm_bytes_table(graph10):
     assert cb["quantized"] < cb["halo"] < cb["dense_gather"]
 
 
+def test_run_many_matches_single_runs(graph10):
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4), iters=25,
+                                      exchange="halo"))
+    sess.partition(g.src, g.dst, g.num_vertices)
+    d, b = sess.run_many(["sssp", "bfs"])
+    assert d.dtype == np.int64 and b.dtype == np.int64
+    np.testing.assert_array_equal(d, sess.run("sssp"))
+    np.testing.assert_array_equal(b, sess.run("bfs"))
+
+
+def test_comm_bytes_programs_and_fused(graph10):
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
+    sess.partition(g.src, g.dst, g.num_vertices)
+    lay = sess.partition_layout
+    table = sess.comm_bytes_programs()
+    # float sum programs ship the lossy int8 wire; min/int ship exact
+    assert table["pagerank"]["quantized"] == \
+        lay.comm_bytes_exchange("quantized", lossy=True)
+    assert table["sssp"]["quantized"] == \
+        lay.comm_bytes_exchange("quantized", lossy=False)
+    for prog in table:
+        assert table[prog]["halo"] < table[prog]["dense"]
+    fused = sess.comm_bytes_fused(["pagerank", "ppr", "centrality"],
+                                  exchange="quantized")
+    assert fused == lay.comm_bytes_fused(3, "quantized")
+    assert fused < 3 * table["pagerank"]["quantized"]
+
+
 def test_with_partition_external_assignment(graph10):
     g = graph10
     rng = np.random.default_rng(0)
@@ -139,7 +169,10 @@ def test_errors_before_partition_and_bad_program(graph10):
     with pytest.raises(ValueError, match="unknown program"):
         sess.run("triangle-count")
     with pytest.raises(ValueError, match="unknown program"):
-        resolve_program("sssp", 10)
+        resolve_program("kcore", 10)
+    # the full registry resolves (sssp et al. joined the library)
+    for name in sorted({"pagerank", "cc", "sssp", "bfs"}):
+        assert resolve_program(name, 10).name == name
 
 
 # --------------------------------------------------- multidevice smoke
@@ -181,6 +214,7 @@ print("SESSION_OK", bytes_[0]["total"])
 """
 
 
+@pytest.mark.multidevice
 def test_session_multidevice_smoke(multidevice):
     out = multidevice(SESSION_SMOKE, n_devices=8)
     assert "SESSION_OK" in out
