@@ -56,4 +56,28 @@ def kernels_microbench():
     t_ref = _time(lambda *a: ref.ell_spmv_ref(*a), vals, cols, x)
     rows.append({"bench": "kernel_ell_spmv", "us_kernel_interp":
                  round(1e6 * t_kern, 1), "us_ref": round(1e6 * t_ref, 1)})
+
+    # cluster-scatter: the clustering inner loop on the Pallas fused
+    # table-update kernel (interpret mode off-TPU) vs the XLA
+    # fused-scatter scan — bit-identical outputs by construction (both
+    # compose edge_decisions), so the cells differ only in µs/edge.
+    # "kernel" is the trend identity field keying the two cells.
+    from functools import partial
+
+    from repro.core.clustering import streaming_clustering_jax
+
+    E, V = 4096, 1024
+    src = jnp.asarray(rng.integers(0, V, E), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, V, E), jnp.int32)
+    outs = {}
+    for kernel in ("xla", "pallas"):
+        fn = jax.jit(partial(streaming_clustering_jax, num_vertices=V,
+                             vmax=64.0, id_cap=2 * V, kernel=kernel))
+        t = _time(fn, src, dst)
+        outs[kernel] = [np.asarray(o) for o in fn(src, dst)]
+        rows.append({"bench": "kernel_cluster_scatter", "kernel": kernel,
+                     "us_per_edge": round(1e6 * t / E, 3)})
+    assert all(np.array_equal(a, b) for a, b in
+               zip(outs["xla"], outs["pallas"])), \
+        "cluster_scatter kernels diverged"
     return rows

@@ -36,20 +36,25 @@ GOOD_UP_HINTS = ("speedup",)
 # "edge_us" is the partitioner-backend runtime column (BENCH_partition):
 # unlike the legacy wall-time columns it is a best-of-N warm measurement
 # and the artifact's whole point, so it diffs lower-is-better instead of
-# hiding as noise
-GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us")
+# hiding as noise; "us_per_edge" is its kernel-cell twin
+# (kernel_cluster_scatter / fig12 kernel-identity rows), and "compiles"
+# counts jit compilations of the stacked k-sweep — fewer is the whole
+# point of compile-once batching
+GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us",
+                   "us_per_edge", "compiles")
 # numeric fields that identify a row rather than measure it — part of the
 # match key, never diffed (fig3/fig7 emit one row per k with identical
 # string fields, so k etc. must disambiguate; "program"/"fused" key the
 # graph dry-run's per-program matrix rows and its fused-bundle row, so a
-# byte move on one program never aliases another's)
+# byte move on one program never aliases another's; "kernel" keys the
+# cluster-scatter / game kernel-identity cells)
 IDENTITY_FIELDS = ("k", "scale", "iters", "seed", "shards", "E", "K",
                    "n_nodes", "exchange", "nodes", "restream", "backend",
-                   "unroll", "program", "fused")
+                   "unroll", "program", "fused", "kernel")
 # identity fields added after a baseline was recorded get a default, so
 # pre-existing artifacts (rows without the key) still match their
 # successors instead of degenerating into removed-row/new-row noise
-IDENTITY_DEFAULTS = {"unroll": 1, "fused": False}
+IDENTITY_DEFAULTS = {"unroll": 1, "fused": False, "kernel": "xla"}
 
 
 def find_bench(path: str) -> Path | None:

@@ -13,5 +13,6 @@ from .stages import (StageCtx, StageSet, PipelineOut,  # noqa: F401
                      run_clugp_body, restream_loop,
                      HOST_STAGES, JAX_STAGES)
 from .partitioner import (BACKENDS, partition,  # noqa: F401
-                          clugp_partition_parallel)
+                          clugp_partition_parallel, partition_sweep,
+                          sweep_trace_count)
 from . import baselines, metrics, theory  # noqa: F401

@@ -29,6 +29,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..kernels.cluster_scatter import cluster_scatter, edge_decisions
+from ..kernels.ops import DEFAULT_INTERPRET
+
 
 @dataclass
 class ClusteringResult:
@@ -184,115 +187,38 @@ def _edge_step_local(carry, x, *, vmax: float, allow_split: bool,
     live = ints[2] != 0
     scrap = 6 * B - 1                 # top fresh slot absorbs dead writes
 
-    def sel(p, a0, a1, a2, a3):
-        return jnp.where(p == 0, a0, jnp.where(p == 1, a1,
-                         jnp.where(p == 2, a2, a3)))
-
-    def bump(p, x, a0, a1, a2, a3):
-        return (a0 + jnp.where(p == 0, x, 0), a1 + jnp.where(p == 1, x, 0),
-                a2 + jnp.where(p == 2, x, 0), a3 + jnp.where(p == 3, x, 0))
-
     # one fused gather: both endpoints' cluster slots + streamed degrees
     g = buf[jnp.stack([lu, lv_, 2 * B + lu, 2 * B + lv_])]
     cu0, cv0 = g[0], g[1]
-    du = g[2] + 1                     # degrees AFTER line 6's increment
-    dv = g[3] + 1
-    duf = du.astype(jnp.float32)
-    dvf = dv.astype(jnp.float32)
-
-    # allocation (lines 3-5): u first, then v
-    preu, prev = cu0 >= 0, cv0 >= 0
-    id0 = jnp.where(preu, cu0, 2 * B + (nid - nid0))
-    nid = nid + (live & ~preu).astype(jnp.int32)
-    id1 = jnp.where(prev, cv0, 2 * B + (nid - nid0))
-    nid = nid + (live & ~prev).astype(jnp.int32)
-    same = id0 == id1
-    seen_v = seen_v + (live & ~preu).astype(jnp.int32) \
-        + (live & ~prev).astype(jnp.int32)
-    seen_deg = seen_deg + 2 * live.astype(jnp.int32)
-    if split_degree_factor > 0.0:
-        dthr = split_degree_factor * seen_deg.astype(jnp.float32) \
-            / jnp.maximum(seen_v, 1).astype(jnp.float32)
-    else:
-        dthr = jnp.float32(0.0)
-
-    # register volumes (v2/v3 are the fresh split slots, created empty)
+    # second fused gather: the two clusters' volumes
     vg = buf[jnp.stack([4 * B + jnp.clip(cu0, 0, scrap),
                         4 * B + jnp.clip(cv0, 0, scrap)])]
-    v0 = jnp.where(preu, vg[0], 0)
-    v1 = jnp.where(prev & ~same, vg[1], 0)
-    v2 = v3 = jnp.int32(0)
-    i0, i1 = v0, v1
-    lvflag = live.astype(jnp.int32)
-    pu = jnp.int32(0)
-    pv = jnp.where(same, 0, 1)
-    v0, v1, v2, v3 = bump(pu, lvflag, v0, v1, v2, v3)
-    v0, v1, v2, v3 = bump(pv, lvflag, v0, v1, v2, v3)
-
-    if allow_split:
-        # same-cluster overflow → split only the higher-degree endpoint;
-        # different clusters → split u first (lines 8-13), then v (14-18)
-        x_is_u = du >= dv
-        t1_is_u = jnp.where(same, x_is_u, True)
-        pt1 = jnp.where(t1_is_u, pu, pv)
-        dt1 = jnp.where(t1_is_u, du, dv)
-        fire1 = live & (sel(pt1, v0, v1, v2, v3) >= vmax) \
-            & (jnp.where(t1_is_u, duf, dvf) >= dthr)
-        f1 = fire1.astype(jnp.int32)
-        v0, v1, v2, v3 = bump(pt1, -dt1 * f1, v0, v1, v2, v3)
-        v2 = v2 + dt1 * f1
-        pu = jnp.where(fire1 & t1_is_u, 2, pu)
-        pv = jnp.where(fire1 & ~t1_is_u, 2, pv)
-        id2 = 2 * B + (nid - nid0)
-        nid = nid + f1
-        fire2 = live & ~same & (sel(pv, v0, v1, v2, v3) >= vmax) \
-            & (dvf >= dthr)
-        f2 = fire2.astype(jnp.int32)
-        v0, v1, v2, v3 = bump(pv, -dv * f2, v0, v1, v2, v3)
-        v3 = v3 + dv * f2
-        id3 = 2 * B + (nid - nid0)
-        nid = nid + f2
-        pv = jnp.where(fire2, 3, pv)
-    else:
-        fire1 = fire2 = live & False
-        t1_is_u = fire1
-        id2 = id3 = jnp.int32(scrap)
-
-    # migration (lines 20-26) with the post-guard
-    vu_cur = sel(pu, v0, v1, v2, v3)
-    vv_cur = sel(pv, v0, v1, v2, v3)
-    both_room = live & (pu != pv) & (vu_cur < vmax) & (vv_cur < vmax)
-    u_moves = both_room & (vu_cur <= vv_cur) & (vv_cur + du < vmax)
-    v_moves = both_room & (vu_cur > vv_cur) & (vu_cur + dv < vmax)
-    mu = u_moves.astype(jnp.int32)
-    mv = v_moves.astype(jnp.int32)
-    v0, v1, v2, v3 = bump(pu, -du * mu + dv * mv, v0, v1, v2, v3)
-    v0, v1, v2, v3 = bump(pv, du * mu - dv * mv, v0, v1, v2, v3)
-    pu, pv = (jnp.where(u_moves, pv, pu), jnp.where(v_moves, pu, pv))
+    # the decision math is shared verbatim with the Pallas fused-scatter
+    # kernel (kernels.cluster_scatter) — both strategies are bit-identical
+    # by construction
+    (nid, seen_v, seen_deg, newu, newv, vol_ids, vol_deltas,
+     packed) = edge_decisions(
+        cu0, cv0, g[2], g[3], vg[0], vg[1], live, nid, nid0, seen_v,
+        seen_deg, vmax=vmax, allow_split=allow_split,
+        split_degree_factor=split_degree_factor, B=B)
 
     # end-of-step write: ONE fused 8-lane scatter-add — the two vertex
     # cluster-pointer deltas, the two degree increments, and the ≤4
     # touched volume slots.  Inside a loop body every scatter at computed
     # indices costs XLA:CPU a buffer copy + kernel call (~1.3 µs), so the
     # step does exactly one.
-    newu = jnp.where(live, sel(pu, id0, id1, id2, id3), cu0)
-    newv = jnp.where(live, sel(pv, id0, id1, id2, id3), cv0)
     lvflag = live.astype(jnp.int32)
     ids = jnp.stack([
         lu, lv_,
         2 * B + lu, 2 * B + lv_,
-        4 * B + jnp.clip(jnp.where(live, id0, scrap), 0, scrap),
-        4 * B + jnp.clip(jnp.where(same, scrap, id1), 0, scrap),
-        4 * B + jnp.clip(jnp.where(fire1, id2, scrap), 0, scrap),
-        4 * B + jnp.clip(jnp.where(fire2, id3, scrap), 0, scrap)])
+        4 * B + vol_ids[0], 4 * B + vol_ids[1],
+        4 * B + vol_ids[2], 4 * B + vol_ids[3]])
     d = jnp.stack([jnp.where(lu != lv_, newu - cu0, 0),
                    newv - cv0,
                    lvflag, lvflag,
-                   v0 - i0, v1 - i1, v2, v3])
+                   vol_deltas[0], vol_deltas[1],
+                   vol_deltas[2], vol_deltas[3]])
     buf = buf.at[ids].add(d)
-    fire_u = fire1 & t1_is_u
-    fire_v = (fire1 & ~t1_is_u) | fire2
-    packed = (fire_u.astype(jnp.int32) + 2 * fire_v.astype(jnp.int32))
     return (buf, nid, nid0, seen_v, seen_deg), packed
 
 
@@ -301,7 +227,8 @@ _BIG_ID = np.int32(2 ** 31 - 1)
 
 def _block_step(carry, x, *, vmax: float, allow_split: bool,
                 split_degree_factor: float, cap: int, num_vertices: int,
-                B: int, unroll: int = 1):
+                B: int, unroll: int = 1, kernel: str = "xla",
+                interpret: bool = DEFAULT_INTERPRET):
     """Process one block of B edges: localize → inner scan → write back."""
     clu, deg, vol, nid, seen_v, seen_deg = carry
     bu, bv = x
@@ -336,16 +263,29 @@ def _block_step(carry, x, *, vmax: float, allow_split: bool,
     buf = jnp.concatenate([lc, ldeg0, lvol0,
                            jnp.zeros((4 * B,), jnp.int32)])
     nid0 = nid
-    inner = partial(_edge_step_local, vmax=vmax, allow_split=allow_split,
-                    split_degree_factor=split_degree_factor, B=B)
     live = (bu != bv).astype(jnp.int32)
     ints = jnp.stack([lu, lv_, live], axis=1)   # one slice per step
-    # ``unroll`` replicates the per-edge transition body (2-edge unroll =
-    # the ROADMAP headroom knob): XLA sees consecutive edges' fused
-    # scatters back to back and can coalesce their buffer traffic.  Pure
-    # lowering choice — the transition semantics are bit-identical.
-    (buf, nid, _, seen_v, seen_deg), fires = jax.lax.scan(
-        inner, (buf, nid, nid0, seen_v, seen_deg), ints, unroll=unroll)
+    if kernel == "pallas":
+        # the whole block table stays resident in kernel memory for the
+        # full edge loop — no per-step buffer copies (the XLA scan's
+        # ~1.3 µs/scatter floor); interpret=True on CPU runs the same
+        # kernel body for correctness (bit-identical, tested)
+        scal0 = jnp.stack([nid, nid0, seen_v, seen_deg])
+        buf, scal, fires = cluster_scatter(
+            ints, buf, scal0, vmax, allow_split=allow_split,
+            split_degree_factor=split_degree_factor, interpret=interpret)
+        nid, seen_v, seen_deg = scal[0], scal[2], scal[3]
+    else:
+        inner = partial(_edge_step_local, vmax=vmax,
+                        allow_split=allow_split,
+                        split_degree_factor=split_degree_factor, B=B)
+        # ``unroll`` replicates the per-edge transition body (2-edge
+        # unroll = the ROADMAP headroom knob): XLA sees consecutive edges'
+        # fused scatters back to back and can coalesce their buffer
+        # traffic.  Pure lowering choice — the transition semantics are
+        # bit-identical.
+        (buf, nid, _, seen_v, seen_deg), fires = jax.lax.scan(
+            inner, (buf, nid, nid0, seen_v, seen_deg), ints, unroll=unroll)
     lclu, ldeg, lvol = buf[:2 * B], buf[2 * B:4 * B], buf[4 * B:]
 
     # write back: vertex → global cluster id (fresh slots map to the ids
@@ -369,7 +309,9 @@ def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
                              allow_split: bool = True,
                              split_degree_factor: float = 0.0,
                              id_cap: int | None = None,
-                             block_size: int = 128, unroll: int = 1):
+                             block_size: int = 128, unroll: int = 1,
+                             kernel: str = "xla",
+                             interpret: bool = DEFAULT_INTERPRET):
     """Blocked lax.scan form; returns raw (non-compacted) labels + state
     arrays (clu, deg, divided, replicas, next_id) — bit-identical to
     ``streaming_clustering_np``.
@@ -383,6 +325,12 @@ def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
 
     ``unroll`` unrolls the inner per-edge scan by that many edges
     (``CLUGPConfig.unroll``); results are bit-identical at any setting.
+
+    ``kernel`` picks the inner-loop strategy: ``"xla"`` = the lax.scan
+    over ``_edge_step_local`` (the fused-scatter scan), ``"pallas"`` = the
+    ``kernels.cluster_scatter`` fused table-update kernel (interpret mode
+    on CPU).  Both share ``edge_decisions`` so results are bit-identical;
+    ``unroll`` only applies to the XLA scan.
     """
     E = src.shape[0]
     cap = int(id_cap) if id_cap is not None else num_vertices + 2 * E + 2
@@ -406,7 +354,7 @@ def streaming_clustering_jax(src, dst, num_vertices: int, vmax: float,
                    allow_split=allow_split,
                    split_degree_factor=float(split_degree_factor),
                    cap=cap, num_vertices=num_vertices, B=B,
-                   unroll=int(unroll))
+                   unroll=int(unroll), kernel=kernel, interpret=interpret)
     (clu, deg, _, next_id, _, _), fires = jax.lax.scan(step, carry, xs)
     fires = fires.reshape(-1)[:E]
     fire_u = (fires & 1) > 0

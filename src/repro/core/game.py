@@ -202,19 +202,35 @@ def greedy_assign(cg: ClusterGraph, k: int) -> np.ndarray:
 # same contraction with CSR tiles.
 # ---------------------------------------------------------------------------
 
-def jax_greedy_assign(sizes, k: int):
+_LANE_BIG = jnp.float32(3e38)   # masks partition lanes >= the traced k_real
+
+
+def _mask_lanes(cost, k_real, lanes=None):
+    """Disable partition lanes past the traced live count ``k_real`` (the
+    compile-once k-sweep pads every per-k problem to k_max lanes).  With
+    ``k_real=None`` (the static-k strategies) this is the identity."""
+    if k_real is None:
+        return cost
+    if lanes is None:
+        lanes = jax.lax.broadcasted_iota(jnp.int32, cost.shape,
+                                         cost.ndim - 1)
+    return jnp.where(lanes < k_real, cost, _LANE_BIG)
+
+
+def jax_greedy_assign(sizes, k: int, k_real=None):
     """jit/shard_map form of ``greedy_assign`` over padded (m_cap,) sizes.
     Bit-identical to the host version: both sort stably by (-size, id) and
     break load ties toward the lowest partition id.  Padded clusters have
     size 0 — they land wherever argmin points but carry no vertices and
-    add no load."""
+    add no load.  ``k_real`` (traced) restricts the argmin to the live
+    lanes of a k_max-padded sweep step."""
     m_cap = sizes.shape[0]
     order = jnp.argsort(-sizes)                 # jnp.argsort is stable
 
     def body(i, carry):
         loads, assign = carry
         c = order[i]
-        p = jnp.argmin(loads).astype(jnp.int32)
+        p = jnp.argmin(_mask_lanes(loads, k_real)).astype(jnp.int32)
         return loads.at[p].add(sizes[c]), assign.at[c].set(p)
 
     loads0 = jnp.zeros((k,), sizes.dtype)
@@ -226,7 +242,8 @@ def jax_greedy_assign(sizes, k: int):
 def jax_game_rounds(xs, xd, sizes, row_tot, k: int, lam, *,
                     batch_size: int, max_rounds: int, seed: int,
                     use_pallas: bool = False, block_m: int = 256,
-                    axis: str | None = None, damping: float = 0.5):
+                    axis: str | None = None, damping: float = 0.5,
+                    k_real=None):
     """Batched best-response rounds (Alg. 3 + §V-D) as a pure jax program.
 
     The cluster graph arrives as its cross-edge list: ``xs``/``xd`` are the
@@ -254,20 +271,30 @@ def jax_game_rounds(xs, xd, sizes, row_tot, k: int, lam, *,
     ``lam`` is a traced scalar (λ_max of the streamed cluster graph).
     With ``use_pallas`` the per-batch argmin sweep runs on the
     ``game_bestresponse`` Pallas kernel (k padded to a 128-lane multiple);
-    otherwise the identical XLA fallback math.  Returns (assign (m_cap,)
-    int32, rounds)."""
+    otherwise the identical XLA fallback math.  ``k_real`` (traced, XLA
+    path only — the Pallas kernel bakes k in) plays the game on the live
+    lanes of a k_max-padded sweep step.  Returns (assign (m_cap,) int32,
+    rounds)."""
+    if k_real is not None and use_pallas:
+        raise ValueError("jax_game_rounds: the Pallas kernel needs a "
+                         "static k; run traced-k sweeps on the xla/scan "
+                         "game modes")
     m_cap = sizes.shape[0]
     kpad = ((k + 127) // 128) * 128 if use_pallas else k
     sizes = sizes.astype(jnp.float32)
     row_tot = row_tot.astype(jnp.float32)
     lam = jnp.asarray(lam, jnp.float32)
+    kf = (jnp.float32(k) if k_real is None
+          else k_real.astype(jnp.float32))
     n_batches = max(1, -(-m_cap // batch_size))
     ar = jnp.arange(m_cap)
 
     key = jax.random.PRNGKey(seed)
     if axis is not None:
         key = jax.random.fold_in(key, jax.lax.axis_index(axis))
-    assign0 = jax.random.randint(key, (m_cap,), 0, k, dtype=jnp.int32)
+    assign0 = jax.random.randint(key, (m_cap,), 0,
+                                 k if k_real is None else k_real,
+                                 dtype=jnp.int32)
     loads0 = jnp.zeros((kpad,), jnp.float32).at[assign0].add(sizes)
     if axis is not None:
         loads0 = jax.lax.psum(loads0, axis)
@@ -292,11 +319,12 @@ def jax_game_rounds(xs, xd, sizes, row_tot, k: int, lam, *,
             pids = jax.lax.broadcasted_iota(jnp.int32, (m_cap, kpad), 1)
             own = (pids == assign[:, None]).astype(jnp.float32)
             loads_ex = loads[None, :] - sizes[:, None] * own
-            cost = (lam / k) * sizes[:, None] * (loads_ex + sizes[:, None]) \
+            cost = (lam / kf) * sizes[:, None] * (loads_ex + sizes[:, None]) \
                 + 0.5 * (row_tot[:, None] - aff)
+            cost = _mask_lanes(cost, k_real, pids)
             best = jnp.argmin(cost, axis=1).astype(jnp.int32)
             best_cost = jnp.min(cost, axis=1)
-        cost_cur = (lam / k) * sizes * loads[assign] \
+        cost_cur = (lam / kf) * sizes * loads[assign] \
             + 0.5 * (row_tot - aff[ar, assign])
         in_batch = (ar >= b * batch_size) & (ar < (b + 1) * batch_size)
         # strict improvement with an f32-relative margin: absolute 1e-9
@@ -329,7 +357,7 @@ def jax_game_rounds(xs, xd, sizes, row_tot, k: int, lam, *,
                .add(1.0, mode="drop"))
         cut = psum_(jnp.sum(row_tot - aff[ar, assign]))
         load_sq = jnp.sum(loads * loads)        # loads are already global
-        return (lam / (2 * k)) * load_sq + 0.25 * cut
+        return (lam / (2 * kf)) * load_sq + 0.25 * cut
 
     stall_rounds = 4
 
@@ -398,7 +426,7 @@ def jax_cluster_csr(xs, xd, m_cap: int, nnz_cap: int):
 
 def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
                        max_rounds: int, seed: int,
-                       axis: str | None = None):
+                       axis: str | None = None, k_real=None):
     """Gauss–Seidel-on-loads best response as a lax.scan over clusters —
     the CPU-fast form of Alg. 3 (the batched-Jacobi ``jax_game_rounds``
     needs damping and ~10× the rounds).  Per round the cut-mass table
@@ -412,16 +440,21 @@ def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
     sweep moves nothing or Φ stalls for ``stall_rounds`` rounds.
 
     Under ``axis`` each device sweeps its private clusters (one batch
-    per device) and loads/moves are psum'd between rounds."""
+    per device) and loads/moves are psum'd between rounds.  ``k_real``
+    (traced) plays on the live lanes of a k_max-padded sweep step."""
     m_cap = sizes.shape[0]
     sizes = sizes.astype(jnp.float32)
     row_tot = row_tot.astype(jnp.float32)
     lam = jnp.asarray(lam, jnp.float32)
+    kf = (jnp.float32(k) if k_real is None
+          else k_real.astype(jnp.float32))
 
     key = jax.random.PRNGKey(seed)
     if axis is not None:
         key = jax.random.fold_in(key, jax.lax.axis_index(axis))
-    assign0 = jax.random.randint(key, (m_cap,), 0, k, dtype=jnp.int32)
+    assign0 = jax.random.randint(key, (m_cap,), 0,
+                                 k if k_real is None else k_real,
+                                 dtype=jnp.int32)
     loads0 = jnp.zeros((k,), jnp.float32).at[assign0].add(sizes)
     if axis is not None:
         loads0 = jax.lax.psum(loads0, axis)
@@ -435,7 +468,8 @@ def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
         cur = assign[i]
         own = (lanes == cur).astype(jnp.float32)
         loads_ex = loads - sz * own
-        cost = (lam / k) * sz * (loads_ex + sz) + 0.5 * (rt - aff)
+        cost = (lam / kf) * sz * (loads_ex + sz) + 0.5 * (rt - aff)
+        cost = _mask_lanes(cost, k_real, lanes)
         best = jnp.argmin(cost).astype(jnp.int32)
         move = cost[best] + 1e-6 + 1e-5 * jnp.abs(cost[cur]) < cost[cur]
         newa = jnp.where(move, best, cur)
@@ -455,7 +489,7 @@ def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
         cut = jnp.sum(row_tot - aff[ar, assign])
         if axis is not None:
             cut = jax.lax.psum(cut, axis)
-        return (lam / (2 * k)) * jnp.sum(loads * loads) + 0.25 * cut
+        return (lam / (2 * kf)) * jnp.sum(loads * loads) + 0.25 * cut
 
     stall_rounds = 4
 

@@ -43,6 +43,7 @@ class CLUGPConfig:
     effective_sizes: bool = False      # beyond-paper: balance |c_i|+boundary
     restream: int = 0                  # extra prioritized-restream passes
     kernel: str = "auto"               # game sweep: "auto" | "pallas" | "xla"
+    cluster_kernel: str = "auto"       # clustering scatter: "auto"|"pallas"|"xla"
     unroll: int = 1                    # clustering inner-scan unroll (1 = off)
     seed: int = 0
 

@@ -67,6 +67,8 @@ class StageCtx:
     id_cap: int = 0            # cluster-id space (jax clustering scan)
     m_cap: int = 0             # compacted-cluster cap (game tables)
     nnz_cap: int = 0           # aggregated cluster-CSR lanes (GS game)
+    k_real: Any = None         # traced live-partition count of a k_max-
+    #                            padded sweep step; None = cfg.k is real
 
 
 # ------------------------------------------------------------- stage protocol
@@ -268,6 +270,22 @@ def resolve_game_mode(kernel: str, m_cap: int) -> str:
     return mode
 
 
+def resolve_cluster_kernel(kernel: str) -> str:
+    """Resolve the clustering fused-scatter strategy.  ``xla`` = the
+    lax.scan inner loop (one fused 8-lane ``.at[].add`` per edge),
+    ``pallas`` = ``kernels.cluster_scatter`` keeping the block table
+    resident in kernel memory (bit-identical — both compose
+    ``edge_decisions``).  ``auto`` picks pallas on TPU and the XLA scan
+    everywhere else (interpret-mode Pallas is a correctness path, not a
+    fast path, on CPU)."""
+    if kernel not in ("auto", "pallas", "xla"):
+        raise ValueError(f"unknown cluster kernel {kernel!r}; expected "
+                         "'auto', 'pallas' or 'xla'")
+    if kernel == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return kernel
+
+
 def cluster_graph_arrays(src, dst, compact, m_cap: int, effective: bool,
                          mask=None):
     """Contract the streamed graph against compacted labels, all in-graph:
@@ -296,12 +314,15 @@ def cluster_graph_arrays(src, dst, compact, m_cap: int, effective: bool,
     return JaxGraph(game_sizes, row_tot, xs, xd, n_cross)
 
 
-def lambda_jax(total, n_cross, k: int, relative_weight):
+def lambda_jax(total, n_cross, k: int, relative_weight, k_real=None):
     """λ_max (Thm 5) / relative-weight λ from traced cluster-graph totals
     (Σ game sizes, #cross edges) — matches ``lambda_max``/
-    ``lambda_from_weight`` (adj.sum()/2 == n_cross)."""
+    ``lambda_from_weight`` (adj.sum()/2 == n_cross).  ``k_real`` (traced)
+    substitutes the live partition count of a k_max-padded sweep step."""
+    kf = jnp.float32(k) if k_real is None else k_real.astype(jnp.float32)
     lam_max = jnp.where(total > 0,
-                        (k * k) * n_cross / jnp.maximum(total * total, 1.0),
+                        (kf * kf) * n_cross / jnp.maximum(total * total,
+                                                          1.0),
                         1.0)
     if relative_weight is None:
         return lam_max
@@ -314,7 +335,8 @@ def _jax_cluster(src, dst, ctx, cfg):
     clu_raw, deg, divided, replicas, next_id = streaming_clustering_jax(
         src, dst, ctx.num_vertices, ctx.vmax, allow_split=cfg.split,
         split_degree_factor=cfg.split_degree_factor, id_cap=ctx.id_cap,
-        unroll=cfg.unroll)
+        unroll=cfg.unroll,
+        kernel=resolve_cluster_kernel(cfg.cluster_kernel))
     compact, m = compact_labels_jax(clu_raw, ctx.id_cap)
     return JaxCluster(compact, deg, divided, replicas, m, next_id)
 
@@ -327,25 +349,31 @@ def _jax_contract(src, dst, cstate, ctx, cfg):
 def _jax_game(gstate, ctx, cfg):
     overflow = jnp.bool_(False)
     if not cfg.game:
-        return jax_greedy_assign(gstate.sizes, cfg.k), jnp.int32(0), overflow
+        return (jax_greedy_assign(gstate.sizes, cfg.k, k_real=ctx.k_real),
+                jnp.int32(0), overflow)
     # λ from the LOCAL cluster graph on every strategy: Thm 5's feasible
     # range is a per-id-space quantity (sharded global totals under-weight
     # the balance term by ~n — measured +22% RF at n=4); the load vector
     # the game plays against is still psum'd under ctx.axis.
     lam = lambda_jax(gstate.sizes.sum(), gstate.n_cross, cfg.k,
-                     cfg.relative_weight)
-    if ctx.game_mode == "scan":
+                     cfg.relative_weight, k_real=ctx.k_real)
+    # the Pallas game kernel bakes k into its grid, so traced-k sweep
+    # steps play the identical XLA fallback math instead
+    mode = ("xla" if ctx.game_mode == "pallas" and ctx.k_real is not None
+            else ctx.game_mode)
+    if mode == "scan":
         row, col, w, overflow = jax_cluster_csr(gstate.xs, gstate.xd,
                                                 ctx.m_cap, ctx.nnz_cap)
         cluster_assign, rounds = jax_game_rounds_gs(
             row, col, w, gstate.sizes, gstate.row_tot, cfg.k, lam,
-            max_rounds=cfg.max_rounds, seed=cfg.seed, axis=ctx.axis)
+            max_rounds=cfg.max_rounds, seed=cfg.seed, axis=ctx.axis,
+            k_real=ctx.k_real)
     else:
         cluster_assign, rounds = jax_game_rounds(
             gstate.xs, gstate.xd, gstate.sizes, gstate.row_tot, cfg.k, lam,
             batch_size=cfg.batch_size, max_rounds=cfg.max_rounds,
-            seed=cfg.seed, use_pallas=ctx.game_mode == "pallas",
-            axis=ctx.axis)
+            seed=cfg.seed, use_pallas=mode == "pallas",
+            axis=ctx.axis, k_real=ctx.k_real)
     return cluster_assign, rounds, overflow
 
 
@@ -355,7 +383,8 @@ def _jax_vertex_part(cluster_assign, cstate, ctx):
 
 def _jax_transform(src, dst, vp, cstate, ctx, cfg):
     return transform_jax(src, dst, vp, cstate.deg, cstate.divided, cfg.k,
-                         cfg.tau, mask=ctx.mask, lmax=ctx.lmax)
+                         cfg.tau, mask=ctx.mask, lmax=ctx.lmax,
+                         k_real=ctx.k_real)
 
 
 def _jax_prior(src, dst, assign, ctx, cfg):

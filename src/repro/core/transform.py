@@ -53,11 +53,16 @@ def transform_np(src: np.ndarray, dst: np.ndarray,
     return assign
 
 
-def _transform_step(loads, edge, *, lmax, k: int):
+def _transform_step(loads, edge, *, lmax, k: int, k_real=None):
     u, v, pu, pv, du, dv, divu, divv, live = edge
     full_u = loads[pu] >= lmax
     full_v = loads[pv] >= lmax
-    least = jnp.argmin(loads).astype(jnp.int32)
+    # lanes past the traced live count (the k_max-padded sweep) must not
+    # win the least-loaded fallback — they stay empty forever
+    cand = (loads if k_real is None
+            else jnp.where(jnp.arange(k) < k_real, loads,
+                           jnp.iinfo(loads.dtype).max))
+    least = jnp.argmin(cand).astype(jnp.int32)
     overflow_choice = jnp.where(~full_u, pu, jnp.where(~full_v, pv, least))
     same = pu == pv
     mirror_choice = jnp.where(divu.astype(bool), pv, pu)
@@ -75,21 +80,24 @@ def _transform_step(loads, edge, *, lmax, k: int):
 
 
 def transform_jax(src, dst, vertex_part, deg, divided, k: int,
-                  tau: float = 1.0, mask=None, lmax=None):
+                  tau: float = 1.0, mask=None, lmax=None, k_real=None):
     """lax.scan form of Alg. 1 (used inside the jitted pipeline).
 
     ``mask`` marks live edges (the sharded backend pads each device's
     stream slice to a static length; padded rows get partition 0 and add
     no load).  ``lmax`` overrides the balance cap — per-device slices use
     τ·|E_local|/k with the *real* (masked) edge count, which is a traced
-    scalar."""
+    scalar.  ``k_real`` (traced) restricts the balance cap and the
+    least-loaded fallback to the live lanes of a k_max-padded sweep
+    step."""
     E = src.shape[0]
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
     live = (jnp.ones((E,), jnp.int32) if mask is None
             else jnp.asarray(mask, jnp.int32))
     if lmax is None:
-        lmax = tau * E / float(k)
+        lmax = (tau * E / float(k) if k_real is None
+                else tau * E / k_real.astype(jnp.float32))
     vp = jnp.asarray(vertex_part, jnp.int32)
     edges = jnp.stack([
         src, dst,
@@ -100,7 +108,8 @@ def transform_jax(src, dst, vertex_part, deg, divided, k: int,
         live,
     ], axis=1)
     loads0 = jnp.zeros((k,), dtype=jnp.int32)
-    step = lambda s, e: _transform_step(s, e, lmax=lmax, k=k)
+    step = lambda s, e: _transform_step(s, e, lmax=lmax, k=k,
+                                        k_real=k_real)
     _, assign = jax.lax.scan(step, loads0, edges)
     return assign
 

@@ -15,6 +15,25 @@ pluggable wire format for those phases:
   ``halo_recv``.  Bytes ∝ k·(k−1)·H_max per phase — within per-pair
   padding of the ideal 2·mirrors volume, so CLUGP's mirror reduction is
   the engine's real wire cost.
+- ``RaggedHaloExchange`` — halo routing without the cross-pair padding:
+  the padded ``all_to_all`` ships H_max lanes for *every* ordered pair,
+  so one hot (p, q) cell inflates the whole collective.  The ragged
+  exchange instead walks the k−1 ring distances with one ``ppermute``
+  each — hop s moves every device's (p → (p+s) mod k) lanes at once,
+  padded only to that distance's max population H_s (the layout's
+  ``halo_schedule``, baked into the exchange instance as a static
+  tuple so it jits).  Σ_s H_s ≤ (k−1)·H_max always, and the gap is the
+  replication-factor skew CLUGP leaves behind — bytes land within
+  per-distance padding of the ideal 2·mirrors volume.  Zero-population
+  distances are skipped at trace time.
+- ``RaggedQuantizedHaloExchange`` — ragged routing with a **top-Δ**
+  sparsified payload: per hop the sender quantizes only the
+  T_s = ⌈top_delta·H_s⌉ largest-|Δ| lanes of its error-feedback delta
+  (int16 lane indices + int8 codes + one fp32 scale), leaving the rest
+  in the residual for a later iteration.  As a fixed-point program
+  converges its deltas concentrate, so shipping the heavy quarter per
+  step loses little transient speed while cutting bytes below even the
+  dense-delta quantized wire.
 - ``QuantizedHaloExchange`` — halo routing with a compressed payload:
   each destination lane group quantizes to int8 codes + one fp32 max-abs
   scale (``dist.compress.quantize_rows``), cutting the per-mirror payload
@@ -66,6 +85,7 @@ the exact fixed point, just along a slightly longer transient.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import jax
@@ -154,10 +174,20 @@ _NUM_SCALE_GROUPS = 8
 
 
 def _quantize_groups(err):
-    """int4 codes + one fp16 scale per 1/8th of the trailing lane row."""
+    """int4 codes + one fp16 scale per 1/8th of the trailing lane row.
+
+    Rows whose lane count is not a multiple of ``_NUM_SCALE_GROUPS`` are
+    zero-padded up to one before grouping — pad lanes quantize to code 0
+    and decoders slice them back off — so the returned codes always have
+    a trailing dim divisible by 8 (and therefore even, which is what the
+    nibble pack needs), whatever ``h_max`` the layout was padded to."""
+    n = err.shape[-1]
+    n8 = -(-n // _NUM_SCALE_GROUPS) * _NUM_SCALE_GROUPS
+    if n8 != n:
+        err = jnp.pad(err, [(0, 0)] * (err.ndim - 1) + [(0, n8 - n)])
     shp = err.shape
     grp = err.reshape(*shp[:-1], _NUM_SCALE_GROUPS,
-                      shp[-1] // _NUM_SCALE_GROUPS)
+                      n8 // _NUM_SCALE_GROUPS)
     amax = jnp.max(jnp.abs(grp), axis=-1)
     scales = jnp.where(amax > 0, amax / _Q4MAX, 1.0).astype(jnp.float16)
     s = jnp.maximum(scales.astype(jnp.float32), 1e-30)[..., None]
@@ -391,12 +421,14 @@ def _ef_encode_fused(lanes, sref, sres):
     H + 4, the fused driver's < 0.6× byte win."""
     err = lanes - sref + sres
     codes, scales = _quantize_groups(err)
-    deq = _dequantize_groups(codes, scales)
+    deq = _dequantize_groups(codes, scales)[..., :err.shape[-1]]
     return sref + deq, err - deq, _nibble_pack(codes), scales
 
 
-def _ef_decode_fused(packed, scales):
-    return _dequantize_groups(_nibble_unpack(packed), scales)
+def _ef_decode_fused(packed, scales, n):
+    """Unpack + dequantize a fused wire payload back to ``n`` lanes
+    (the encoder may have zero-padded the row up to a multiple of 8)."""
+    return _dequantize_groups(_nibble_unpack(packed), scales)[..., :n]
 
 
 def _ef_encode(lanes, sref, sres):
@@ -550,7 +582,8 @@ class QuantizedHaloExchange:
                                                       st["sres"])
         rpacked = jax.lax.all_to_all(packed, self.axis, 0, 0)  # int4 wire
         rscales = jax.lax.all_to_all(scales, self.axis, 0, 0)
-        rref = st["rref"] + _ef_decode_fused(rpacked, rscales)
+        rref = st["rref"] + _ef_decode_fused(rpacked, rscales,
+                                             st["rref"].shape[-1])
         agg = _segment_combine_multi(rref, dev["halo_recv"], l_max + 1,
                                      combine)
         total = _merge(partials, agg, combine)
@@ -568,7 +601,8 @@ class QuantizedHaloExchange:
                                                       st["sres"])
         rpacked = jax.lax.all_to_all(packed, self.axis, 0, 0)  # int4 wire
         rscales = jax.lax.all_to_all(scales, self.axis, 0, 0)
-        rref = st["rref"] + _ef_decode_fused(rpacked, rscales)
+        rref = st["rref"] + _ef_decode_fused(rpacked, rscales,
+                                             st["rref"].shape[-1])
         values = _unpack_multi(new_masters, rref, dev)
         return values, {**state, "bcast": {"sref": sref, "sres": sres,
                                            "rref": rref}}
@@ -586,7 +620,8 @@ class QuantizedHaloExchange:
         sref, sres, packed, scales = _ef_encode_fused(lanes, st["sref"],
                                                       st["sres"])
         rref = st["rref"] + _ef_decode_fused(jnp.swapaxes(packed, 0, 1),
-                                             jnp.swapaxes(scales, 0, 1))
+                                             jnp.swapaxes(scales, 0, 1),
+                                             st["rref"].shape[-1])
         agg = jax.vmap(
             lambda r, s: _segment_combine_multi(r, s, l_max + 1, combine)
         )(rref, dev["halo_recv"])
@@ -606,7 +641,8 @@ class QuantizedHaloExchange:
         sref, sres, packed, scales = _ef_encode_fused(lanes, st["sref"],
                                                       st["sres"])
         rref = st["rref"] + _ef_decode_fused(jnp.swapaxes(packed, 0, 1),
-                                             jnp.swapaxes(scales, 0, 1))
+                                             jnp.swapaxes(scales, 0, 1),
+                                             st["rref"].shape[-1])
         values = jax.vmap(
             lambda m, r, d: _unpack_multi(m, r, d)
         )(masters, rref, dev)
@@ -622,18 +658,437 @@ class QuantizedHaloExchange:
         return layout.comm_bytes_halo_quantized()
 
 
+# ------------------------------------------------- ragged ring exchanges
+
+def _scatter_last(idx, vals, n):
+    """Dense (..., n) array with ``vals`` placed at ``idx`` along the
+    last axis (indices within a row are distinct — top_k output)."""
+    flat_i = idx.reshape(-1, idx.shape[-1])
+    flat_v = vals.reshape(-1, vals.shape[-1])
+    out = jax.vmap(
+        lambda i, v: jnp.zeros((n,), vals.dtype).at[i].set(v)
+    )(flat_i, flat_v)
+    return out.reshape(*idx.shape[:-1], n)
+
+
+def _row(table, i, h):
+    """Traced row ``table[i, :h]`` of a (k, H_max) per-device table."""
+    return jax.lax.dynamic_index_in_dim(table, i, 0, keepdims=False)[:h]
+
+
+DEFAULT_TOP_DELTA = 0.25
+
+
+@dataclass(frozen=True)
+class RaggedHaloExchange:
+    """Mirror-routed sync over k−1 ppermute ring hops, each padded only
+    to its own distance's lane population (``schedule`` — the layout's
+    ``halo_schedule()``, static so the instance hashes as a jit key).
+
+    Hop s pairs every device p with owner (p+s) mod k; lanes are packed
+    at the front of each (p, q) row of the halo tables, so the prefix
+    slice [:H_s] covers every real lane at that distance.  Reduce runs
+    all hops, then ONE segment-combine over the concatenated received
+    lanes; broadcast scatters each hop straight into the mirror slots
+    (each mirror receives from exactly one owner on exactly one hop).
+    """
+    axis: str | None = None
+    schedule: tuple = ()
+    name = "ragged"
+
+    @property
+    def k(self) -> int:
+        return len(self.schedule) + 1
+
+    def _hops(self):
+        """(distance, H_s) for the populated distances only."""
+        return [(s, h) for s, h in enumerate(self.schedule, 1) if h > 0]
+
+    def init_state(self, dev, dtype, combine: str = "sum"):
+        return ()
+
+    # -- per-device halves (inside shard_map over ``axis``) --
+    def reduce_to_masters(self, partial, dev, combine: str = "sum",
+                          state=()):
+        l_max = partial.shape[0]
+        k = self.k
+        me = jax.lax.axis_index(self.axis)
+        recvs, slots = [], []
+        for s, h in self._hops():
+            send = _pack(partial, _row(dev["halo_send"], (me + s) % k, h),
+                         combine)
+            recv = jax.lax.ppermute(
+                send, self.axis, [(p, (p + s) % k) for p in range(k)])
+            recvs.append(recv)
+            slots.append(_row(dev["halo_recv"], (me - s) % k, h))
+        if not recvs:
+            return partial, state
+        agg = _segment_combine(jnp.concatenate(recvs),
+                               jnp.concatenate(slots),
+                               l_max + 1, combine)[:l_max]
+        return _merge(partial, agg, combine), state
+
+    def broadcast_from_masters(self, new_master, dev, combine: str = "sum",
+                               state=()):
+        l_max = new_master.shape[0]
+        k = self.k
+        me = jax.lax.axis_index(self.axis)
+        scattered = jnp.zeros((l_max + 1,), new_master.dtype)
+        for s, h in self._hops():
+            # owner q ships to mirror (q−s) mod k — the reverse route of
+            # reduce hop s, so the same H_s covers it
+            send = _pack(new_master,
+                         _row(dev["halo_recv"], (me - s) % k, h), combine)
+            recv = jax.lax.ppermute(
+                send, self.axis, [(p, (p - s) % k) for p in range(k)])
+            wslot = _row(dev["halo_send"], (me + s) % k, h)
+            scattered = scattered.at[wslot].set(recv)
+        return jnp.where(dev["is_master"], new_master,
+                         scattered[:l_max]), state
+
+    # -- stacked halves: ppermute over k virtual devices == jnp.roll --
+    def reduce_stacked(self, partials, dev, combine: str = "sum", state=()):
+        l_max = partials.shape[1]
+        ar = jnp.arange(self.k)
+        recvs, slots = [], []
+        for s, h in self._hops():
+            rows = dev["halo_send"][ar, (ar + s) % self.k, :h]
+            send = jax.vmap(
+                lambda v, r: _pack(v, r, combine))(partials, rows)
+            recvs.append(jnp.roll(send, s, axis=0))
+            slots.append(dev["halo_recv"][ar, (ar - s) % self.k, :h])
+        if not recvs:
+            return partials, state
+        recv_all = jnp.concatenate(recvs, axis=1)
+        slot_all = jnp.concatenate(slots, axis=1)
+
+        def one(r, sl, pq):
+            agg = _segment_combine(r, sl, l_max + 1, combine)[:l_max]
+            return _merge(pq, agg, combine)
+
+        return jax.vmap(one)(recv_all, slot_all, partials), state
+
+    def broadcast_stacked(self, masters, dev, combine: str = "sum",
+                          state=()):
+        l_max = masters.shape[1]
+        ar = jnp.arange(self.k)
+        scattered = jnp.zeros((self.k, l_max + 1), masters.dtype)
+        for s, h in self._hops():
+            rows = dev["halo_recv"][ar, (ar - s) % self.k, :h]
+            send = jax.vmap(
+                lambda v, r: _pack(v, r, combine))(masters, rows)
+            recv = jnp.roll(send, -s, axis=0)
+            wslots = dev["halo_send"][ar, (ar + s) % self.k, :h]
+            scattered = jax.vmap(
+                lambda a, w, r: a.at[w].set(r))(scattered, wslots, recv)
+        return jnp.where(dev["is_master"], masters,
+                         scattered[:, :l_max]), state
+
+    # -- multi-lane halves: exact payloads concatenate, so fusing is a
+    # static python loop over programs sharing each hop's route --
+    def init_state_multi(self, dev, dtype, combine: str, n: int):
+        return ()
+
+    def reduce_to_masters_multi(self, partials, dev, combine: str = "sum",
+                                state=()):
+        outs = [self.reduce_to_masters(p, dev, combine)[0]
+                for p in partials]
+        return jnp.stack(outs), state
+
+    def broadcast_from_masters_multi(self, new_masters, dev,
+                                     combine: str = "sum", state=()):
+        outs = [self.broadcast_from_masters(m, dev, combine)[0]
+                for m in new_masters]
+        return jnp.stack(outs), state
+
+    def reduce_stacked_multi(self, partials, dev, combine: str = "sum",
+                             state=()):
+        outs = [self.reduce_stacked(p, dev, combine)[0]
+                for p in jnp.moveaxis(partials, 1, 0)]
+        return jnp.moveaxis(jnp.stack(outs), 0, 1), state
+
+    def broadcast_stacked_multi(self, masters, dev, combine: str = "sum",
+                                state=()):
+        outs = [self.broadcast_stacked(m, dev, combine)[0]
+                for m in jnp.moveaxis(masters, 1, 0)]
+        return jnp.moveaxis(jnp.stack(outs), 0, 1), state
+
+    def bytes_per_iter(self, layout, value_bytes: int = 4) -> int:
+        return layout.comm_bytes_ragged(value_bytes)
+
+
+@dataclass(frozen=True)
+class RaggedQuantizedHaloExchange:
+    """Ragged ring routing with a top-Δ sparsified error-feedback
+    payload: per hop only the T_s = ⌈top_delta·H_s⌉ largest-|Δ| lanes of
+    the delta ship, as int16 lane indices + int8 codes + one fp32
+    max-abs scale; un-sent lanes simply stay outstanding in the
+    reference gap and ship a later iteration once they dominate.
+    References advance in lockstep like ``QuantizedHaloExchange``
+    (``sref`` on the sender row, ``rref`` on the receiver row), but
+    there is deliberately NO carried ``sres`` residual: under top-Δ
+    sparsification the outstanding delta (lanes − sref) already *is*
+    the residual, and a separate carry would double-count every un-sent
+    lane each round (err ← 2·err — exponential divergence; the padded
+    encoder tolerates the carry only because it quantizes every lane,
+    which makes that recurrence contract).
+
+    Non-lossy programs (min-combine / integer payloads) delegate to the
+    exact ``RaggedHaloExchange`` wire, like the padded quantized backend
+    does."""
+    axis: str | None = None
+    schedule: tuple = ()
+    top_delta: float = DEFAULT_TOP_DELTA
+    name = "ragged_quantized"
+
+    @property
+    def k(self) -> int:
+        return len(self.schedule) + 1
+
+    @property
+    def _exact(self) -> RaggedHaloExchange:
+        return RaggedHaloExchange(axis=self.axis, schedule=self.schedule)
+
+    def _hops(self):
+        return [(s, h) for s, h in enumerate(self.schedule, 1) if h > 0]
+
+    def _top(self, h: int) -> int:
+        return min(h, max(1, math.ceil(self.top_delta * h)))
+
+    def init_state(self, dev, dtype, combine: str = "sum"):
+        if not lossy_payload(combine, dtype):
+            return ()
+        # lead dims: () for the per-device (k, H_max) tables, (k,) for
+        # the stacked (k, k, H_max) ones — one state pytree serves both
+        lead = dev["halo_send"].shape[:-2]
+
+        def lanes():
+            return tuple({"sref": jnp.zeros((*lead, h), jnp.float32),
+                          "rref": jnp.zeros((*lead, h), jnp.float32)}
+                         for _, h in self._hops())
+
+        return {"reduce": lanes(), "bcast": lanes()}
+
+    def _encode(self, lanes, st, h):
+        """Top-Δ error-feedback step for one hop: returns the advanced
+        sender state and the (idx, codes, scales) wire triplet.  The
+        outstanding delta is recomputed from the reference each call —
+        quantization error and un-sent lanes both live in (lanes −
+        sref) and need no separate carry (see the class docstring)."""
+        err = lanes - st["sref"]
+        t = self._top(h)
+        _, idx = jax.lax.top_k(jnp.abs(err), t)
+        vals = jnp.take_along_axis(err, idx, -1)
+        codes, scales = quantize_rows(vals)
+        deq = _scatter_last(idx, dequantize_rows(codes, scales), h)
+        return ({"sref": st["sref"] + deq, "rref": st["rref"]},
+                (idx.astype(jnp.int16), codes, scales))
+
+    @staticmethod
+    def _decode(ridx, rcodes, rscales, h):
+        return _scatter_last(ridx.astype(jnp.int32),
+                             dequantize_rows(rcodes, rscales), h)
+
+    # -- per-device halves (inside shard_map over ``axis``) --
+    def reduce_to_masters(self, partial, dev, combine: str = "sum",
+                          state=()):
+        if not state:
+            return self._exact.reduce_to_masters(partial, dev, combine,
+                                                 state)
+        l_max = partial.shape[0]
+        k = self.k
+        me = jax.lax.axis_index(self.axis)
+        new_st, rrefs, slots = [], [], []
+        for (s, h), st in zip(self._hops(), state["reduce"]):
+            lanes = _pack(partial, _row(dev["halo_send"], (me + s) % k, h),
+                          combine)
+            st, wire = self._encode(lanes, st, h)
+            perm = [(p, (p + s) % k) for p in range(k)]
+            ridx, rcodes, rscales = (
+                jax.lax.ppermute(w, self.axis, perm) for w in wire)
+            rref = st["rref"] + self._decode(ridx, rcodes, rscales, h)
+            new_st.append({**st, "rref": rref})
+            rrefs.append(rref)
+            slots.append(_row(dev["halo_recv"], (me - s) % k, h))
+        if not rrefs:
+            return partial, state
+        agg = _segment_combine(jnp.concatenate(rrefs),
+                               jnp.concatenate(slots),
+                               l_max + 1, combine)[:l_max]
+        return _merge(partial, agg, combine), \
+            {**state, "reduce": tuple(new_st)}
+
+    def broadcast_from_masters(self, new_master, dev, combine: str = "sum",
+                               state=()):
+        if not state:
+            return self._exact.broadcast_from_masters(new_master, dev,
+                                                      combine, state)
+        l_max = new_master.shape[0]
+        k = self.k
+        me = jax.lax.axis_index(self.axis)
+        scattered = jnp.zeros((l_max + 1,), new_master.dtype)
+        new_st = []
+        for (s, h), st in zip(self._hops(), state["bcast"]):
+            lanes = _pack(new_master,
+                          _row(dev["halo_recv"], (me - s) % k, h), combine)
+            st, wire = self._encode(lanes, st, h)
+            perm = [(p, (p - s) % k) for p in range(k)]
+            ridx, rcodes, rscales = (
+                jax.lax.ppermute(w, self.axis, perm) for w in wire)
+            rref = st["rref"] + self._decode(ridx, rcodes, rscales, h)
+            new_st.append({**st, "rref": rref})
+            wslot = _row(dev["halo_send"], (me + s) % k, h)
+            scattered = scattered.at[wslot].set(rref)
+        values = jnp.where(dev["is_master"], new_master,
+                           scattered[:l_max])
+        return values, {**state, "bcast": tuple(new_st)}
+
+    # -- stacked halves: ppermute over k virtual devices == jnp.roll --
+    def reduce_stacked(self, partials, dev, combine: str = "sum", state=()):
+        if not state:
+            return self._exact.reduce_stacked(partials, dev, combine,
+                                              state)
+        l_max = partials.shape[1]
+        ar = jnp.arange(self.k)
+        new_st, rrefs, slots = [], [], []
+        for (s, h), st in zip(self._hops(), state["reduce"]):
+            rows = dev["halo_send"][ar, (ar + s) % self.k, :h]
+            lanes = jax.vmap(
+                lambda v, r: _pack(v, r, combine))(partials, rows)
+            st, wire = self._encode(lanes, st, h)
+            ridx, rcodes, rscales = (jnp.roll(w, s, axis=0) for w in wire)
+            rref = st["rref"] + self._decode(ridx, rcodes, rscales, h)
+            new_st.append({**st, "rref": rref})
+            rrefs.append(rref)
+            slots.append(dev["halo_recv"][ar, (ar - s) % self.k, :h])
+        if not rrefs:
+            return partials, state
+        recv_all = jnp.concatenate(rrefs, axis=1)
+        slot_all = jnp.concatenate(slots, axis=1)
+
+        def one(r, sl, pq):
+            agg = _segment_combine(r, sl, l_max + 1, combine)[:l_max]
+            return _merge(pq, agg, combine)
+
+        return jax.vmap(one)(recv_all, slot_all, partials), \
+            {**state, "reduce": tuple(new_st)}
+
+    def broadcast_stacked(self, masters, dev, combine: str = "sum",
+                          state=()):
+        if not state:
+            return self._exact.broadcast_stacked(masters, dev, combine,
+                                                 state)
+        l_max = masters.shape[1]
+        ar = jnp.arange(self.k)
+        scattered = jnp.zeros((self.k, l_max + 1), masters.dtype)
+        new_st = []
+        for (s, h), st in zip(self._hops(), state["bcast"]):
+            rows = dev["halo_recv"][ar, (ar - s) % self.k, :h]
+            lanes = jax.vmap(
+                lambda v, r: _pack(v, r, combine))(masters, rows)
+            st, wire = self._encode(lanes, st, h)
+            ridx, rcodes, rscales = (jnp.roll(w, -s, axis=0) for w in wire)
+            rref = st["rref"] + self._decode(ridx, rcodes, rscales, h)
+            new_st.append({**st, "rref": rref})
+            wslots = dev["halo_send"][ar, (ar + s) % self.k, :h]
+            scattered = jax.vmap(
+                lambda a, w, r: a.at[w].set(r))(scattered, wslots, rref)
+        values = jnp.where(dev["is_master"], masters,
+                           scattered[:, :l_max])
+        return values, {**state, "bcast": tuple(new_st)}
+
+    # -- multi-lane halves: per-program states, shared hop routes --
+    def init_state_multi(self, dev, dtype, combine: str, n: int):
+        if not lossy_payload(combine, dtype):
+            return ()
+        return tuple(self.init_state(dev, dtype, combine)
+                     for _ in range(n))
+
+    def reduce_to_masters_multi(self, partials, dev, combine: str = "sum",
+                                state=()):
+        if not state:
+            return self._exact.reduce_to_masters_multi(partials, dev,
+                                                       combine, state)
+        outs, sts = [], []
+        for p, st in zip(partials, state):
+            o, ns = self.reduce_to_masters(p, dev, combine, st)
+            outs.append(o)
+            sts.append(ns)
+        return jnp.stack(outs), tuple(sts)
+
+    def broadcast_from_masters_multi(self, new_masters, dev,
+                                     combine: str = "sum", state=()):
+        if not state:
+            return self._exact.broadcast_from_masters_multi(
+                new_masters, dev, combine, state)
+        outs, sts = [], []
+        for m, st in zip(new_masters, state):
+            o, ns = self.broadcast_from_masters(m, dev, combine, st)
+            outs.append(o)
+            sts.append(ns)
+        return jnp.stack(outs), tuple(sts)
+
+    def reduce_stacked_multi(self, partials, dev, combine: str = "sum",
+                             state=()):
+        if not state:
+            return self._exact.reduce_stacked_multi(partials, dev,
+                                                    combine, state)
+        outs, sts = [], []
+        for p, st in zip(jnp.moveaxis(partials, 1, 0), state):
+            o, ns = self.reduce_stacked(p, dev, combine, st)
+            outs.append(o)
+            sts.append(ns)
+        return jnp.moveaxis(jnp.stack(outs), 0, 1), tuple(sts)
+
+    def broadcast_stacked_multi(self, masters, dev, combine: str = "sum",
+                                state=()):
+        if not state:
+            return self._exact.broadcast_stacked_multi(masters, dev,
+                                                       combine, state)
+        outs, sts = [], []
+        for m, st in zip(jnp.moveaxis(masters, 1, 0), state):
+            o, ns = self.broadcast_stacked(m, dev, combine, st)
+            outs.append(o)
+            sts.append(ns)
+        return jnp.moveaxis(jnp.stack(outs), 0, 1), tuple(sts)
+
+    def bytes_per_iter(self, layout, value_bytes: int = 4,
+                       combine: str = "sum", dtype=jnp.float32) -> int:
+        if not lossy_payload(combine, dtype):
+            return layout.comm_bytes_ragged(value_bytes)
+        return layout.comm_bytes_ragged_quantized(self.top_delta)
+
+
 EXCHANGES = {"dense": DenseExchange, "halo": HaloExchange,
-             "quantized": QuantizedHaloExchange}
+             "quantized": QuantizedHaloExchange,
+             "ragged": RaggedHaloExchange,
+             "ragged_quantized": RaggedQuantizedHaloExchange}
+
+# the ragged wire formats need the layout's static per-distance schedule
+RAGGED_EXCHANGES = ("ragged", "ragged_quantized")
 
 
-def get_exchange(name: str, axis: str | None = None):
-    """Exchange factory: ``name`` ∈ {"dense", "halo", "quantized"};
-    ``axis`` is the mesh axis for the shard_map halves (stacked halves
-    ignore it)."""
-    try:
-        cls = EXCHANGES[name]
-    except KeyError:
+def get_exchange(name: str, axis: str | None = None, *,
+                 layout=None, top_delta: float | None = None):
+    """Exchange factory: ``name`` ∈ ``EXCHANGES``; ``axis`` is the mesh
+    axis for the shard_map halves (stacked halves ignore it).  The
+    ragged wire formats additionally need ``layout`` — their static
+    per-distance lane schedule (``layout.halo_schedule()``) is baked
+    into the (hashable) instance so it can key jit caches.
+    ``top_delta`` tunes the ragged-quantized sparsification fraction."""
+    if name not in EXCHANGES:
         raise ValueError(
             f"unknown exchange {name!r}; expected one of "
-            f"{sorted(EXCHANGES)}") from None
-    return cls(axis=axis)
+            f"{sorted(EXCHANGES)}")
+    if name in RAGGED_EXCHANGES:
+        if layout is None:
+            raise ValueError(
+                f"exchange {name!r} needs layout= for its static "
+                "per-distance lane schedule (layout.halo_schedule())")
+        schedule = tuple(int(h) for h in layout.halo_schedule())
+        if name == "ragged":
+            return RaggedHaloExchange(axis=axis, schedule=schedule)
+        return RaggedQuantizedHaloExchange(
+            axis=axis, schedule=schedule,
+            top_delta=DEFAULT_TOP_DELTA if top_delta is None else top_delta)
+    return EXCHANGES[name](axis=axis)

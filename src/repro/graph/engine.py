@@ -17,6 +17,14 @@ mirror-sync phases go through the pluggable exchange layer
   per-lane-group scales and an error-feedback residual threaded through
   the iteration carry — ~4× fewer payload bytes for fp32 programs, exact
   int32 passthrough for ``combine="min"`` programs (CC labels).
+- ``exchange="ragged"`` / ``"ragged_quantized"``: the all_to_all's
+  cross-pair H_max padding replaced by k−1 ppermute ring hops, each
+  padded only to its own distance's lane population (the layout's
+  ``halo_schedule()``, baked into the exchange instance as a static
+  tuple — which is why the jitted drivers below key their caches on the
+  exchange *instance*, not its name).  The quantized variant ships only
+  the top-Δ largest error-feedback deltas per hop (int16 index + int8
+  code pairs).
 
 The engine is **program-parametric**: a ``GASProgram`` bundles the four
 per-device callables (init / local gather-scatter / apply / optional
@@ -434,9 +442,11 @@ def _stack_dev(layout: PartitionLayout, exchange: str | None = None):
                                   layout.device_arrays(exchange))
 
 
-@partial(jax.jit, static_argnames=("program", "iters", "exchange"))
-def _sim_gas(program: GASProgram, dev, iters: int, exchange: str):
-    ex = get_exchange(exchange)
+@partial(jax.jit, static_argnames=("program", "iters", "ex"))
+def _sim_gas(program: GASProgram, dev, iters: int, ex):
+    # ``ex`` is the exchange INSTANCE (frozen dataclass, hashable): the
+    # ragged formats carry their per-layout lane schedule in the
+    # instance, so the instance — not the exchange name — is the cache key
     value = jax.vmap(program.init)(dev)
     # iters == 0 must return init values without even tracing the loop
     # body — a trip-count-0 fori_loop still bakes its collectives into
@@ -463,7 +473,8 @@ def simulate_gas(program: GASProgram, layout: PartitionLayout,
     """Stacked one-device driver for any GAS program (bit-identical math
     to ``shard_map_gas`` — the collectives become transposes/gathers)."""
     dev = _stack_dev(layout, exchange)
-    values = _sim_gas(program, dev, iters, exchange)
+    ex = get_exchange(exchange, layout=layout)
+    values = _sim_gas(program, dev, iters, ex)
     return _collect_master_values(layout, values)
 
 
@@ -488,7 +499,7 @@ def shard_map_gas(program: GASProgram, layout: PartitionLayout, mesh: Mesh,
     Requires mesh axis size == layout.k.  ``exchange`` picks the mirror
     wire format (see module docstring).  Returns (V,) master values."""
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, axis)
+    ex = get_exchange(exchange, axis, layout=layout)
     spec = P(axis)
 
     @partial(shard_map, mesh=mesh,
@@ -621,9 +632,8 @@ def _gas_body_multi(fused: FusedGAS, ex, dev, axis: str | None = None):
     return body
 
 
-@partial(jax.jit, static_argnames=("fused", "iters", "exchange"))
-def _sim_gas_many(fused: FusedGAS, dev, iters: int, exchange: str):
-    ex = get_exchange(exchange)
+@partial(jax.jit, static_argnames=("fused", "iters", "ex"))
+def _sim_gas_many(fused: FusedGAS, dev, iters: int, ex):
     value = jnp.stack([jax.vmap(p.init)(dev) for p in fused.programs],
                       axis=1)
     if iters:
@@ -640,7 +650,8 @@ def simulate_gas_many(programs, layout: PartitionLayout, iters: int = 30,
     dense (V,) master-value array per program, in bundle order."""
     fused = fuse_programs(programs)
     dev = _stack_dev(layout, exchange)
-    values = _sim_gas_many(fused, dev, iters, exchange)
+    ex = get_exchange(exchange, layout=layout)
+    values = _sim_gas_many(fused, dev, iters, ex)
     return [_collect_master_values(layout, values[:, i])
             for i in range(len(fused.programs))]
 
@@ -652,7 +663,7 @@ def shard_map_gas_many(programs, layout: PartitionLayout, mesh: Mesh,
     mirror-sync collective per phase for the whole bundle."""
     fused = fuse_programs(programs)
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, axis)
+    ex = get_exchange(exchange, axis, layout=layout)
     spec = P(axis)
 
     @partial(shard_map, mesh=mesh,
@@ -686,7 +697,7 @@ def gas_step_for_dryrun(program, layout: PartitionLayout,
     multi-program iteration (one collective per phase for the bundle) so
     the dry-run can compare fused vs. separate wire bytes."""
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, axis)
+    ex = get_exchange(exchange, axis, layout=layout)
     spec = P(axis)
     fused = (None if isinstance(program, GASProgram)
              else fuse_programs(program))

@@ -33,6 +33,19 @@ All tables are padded to static shapes so the engine jits/shard_maps:
                                   value goes to owner q (pad: L_max)
   halo_recv         (k, k, H_max) [q, p, h] → q's master slot where the
                                   h-th value from p lands (pad: L_max)
+  halo_cnt          (k, k)        [p, q] → number of REAL mirror lanes in
+                                  halo_send[p, q] (lanes are packed at the
+                                  front of each pair row, so the first
+                                  halo_cnt[p, q] entries are valid)
+
+``halo_cnt`` is what makes the **ragged** exchanges possible: the padded
+halo wire ships H_max = max over all pairs for *every* pair, so one hot
+(p, q) cell inflates the whole all_to_all.  The ragged exchange instead
+runs k−1 ``ppermute`` hops — hop s moves the (p, (p+s) mod k) lanes for
+every p at once — each padded only to that *distance's* max population
+H_s = max_p halo_cnt[p, (p+s) mod k] (``halo_schedule``).  Skewed
+replication factors (the common case on web graphs) make Σ_s H_s ≪
+(k−1)·H_max.
 """
 from __future__ import annotations
 
@@ -61,6 +74,7 @@ class PartitionLayout:
     out_deg: np.ndarray      # (k, L_max) int32 global out-degree
     halo_send: np.ndarray    # (k, k, H_max) int32 mirror slots; pad = l_max
     halo_recv: np.ndarray    # (k, k, H_max) int32 master slots; pad = l_max
+    halo_cnt: np.ndarray     # (k, k) int32 real lanes per ordered pair
     mirrors_total: int       # Σ_v (|P(v)| − 1)
 
     # per-device tables every backend needs, and each wire format's own
@@ -70,7 +84,14 @@ class PartitionLayout:
                        "halo": ("halo_send", "halo_recv"),
                        # quantized rides the same routing tables; only the
                        # payload encoding differs (int8 codes + scales)
-                       "quantized": ("halo_send", "halo_recv")}
+                       "quantized": ("halo_send", "halo_recv"),
+                       # the ragged exchanges slice prefixes of the same
+                       # tables per ppermute distance (lanes are packed at
+                       # the front of each pair row); the static schedule
+                       # itself travels in the exchange instance, not as a
+                       # device array
+                       "ragged": ("halo_send", "halo_recv"),
+                       "ragged_quantized": ("halo_send", "halo_recv")}
 
     def device_arrays(self, exchange: str | None = None) -> dict:
         """The pytree of arrays each device needs (leading k axis).
@@ -98,6 +119,38 @@ class PartitionLayout:
         leaves the device)."""
         return 2 * self.k * (self.k - 1) * self.h_max * value_bytes
 
+    def halo_schedule(self) -> tuple:
+        """Static per-distance lane counts for the ragged ring exchange:
+        entry s−1 is H_s = max_p halo_cnt[p, (p+s) mod k] for hop
+        distance s = 1..k−1.  Every device sends its (p → (p+s) mod k)
+        lanes on hop s, padded only to that distance's max population;
+        H_s = 0 hops are skipped at trace time."""
+        k = self.k
+        ar = np.arange(k)
+        return tuple(int(self.halo_cnt[ar, (ar + s) % k].max(initial=0))
+                     for s in range(1, k))
+
+    def comm_bytes_ragged(self, value_bytes: int = 4) -> int:
+        """Ragged exact exchange: per phase every device sends Σ_s H_s
+        values over k−1 ppermute hops (no self lane, no cross-pair
+        padding) — always ≤ the padded halo volume, and equal to the
+        ideal 2·mirrors volume when the per-distance maxima are tight."""
+        return 2 * self.k * sum(self.halo_schedule()) * value_bytes
+
+    def comm_bytes_ragged_quantized(self, top_delta: float = 0.25,
+                                    value_bytes: int = 4) -> int:
+        """Ragged top-Δ exchange: per hop the sender ships only the
+        T_s = max(1, ⌈top_delta·H_s⌉) largest-|Δ| lanes as (int16 lane
+        index + int8 code) pairs plus one fp32 max-abs scale — the rest
+        stays in the error-feedback residual for a later iteration."""
+        total = 0
+        for h in self.halo_schedule():
+            if h == 0:
+                continue
+            t = min(h, max(1, int(np.ceil(top_delta * h))))
+            total += 3 * t + 4          # 2 B index + 1 B code + scale/H_s
+        return 2 * self.k * total
+
     def comm_bytes_halo_quantized(self, code_bytes: int = 1,
                                   scale_bytes: int = 4) -> int:
         """Quantized halo backend (fp32 programs): each of the k·(k−1)
@@ -117,11 +170,14 @@ class PartitionLayout:
         ``*_multi`` on the quantized backend): N lossy programs share one
         all_to_all per phase whose codes are int4 nibble-packed two per
         byte, with fp16 scales over 8 subgroups per (destination,
-        program) lane row (H_max is padded to a multiple of 8, so rows
-        split evenly and the nibble count is even) — (H/2 + 16)/(H + 4)
-        ≈ 0.55× the bytes of N separate int8 quantized steps."""
+        program) lane row — (H/2 + 16)/(H + 4) ≈ 0.55× the bytes of N
+        separate int8 quantized steps.  The encoder pads each row up to
+        a multiple of 8 internally (``halo._quantize_groups``), so the
+        wire width is ⌈H_max/8⌉·8 nibbles — H_max itself need not
+        divide by 8."""
+        h8 = -(-self.h_max // 8) * 8
         return 2 * self.k * (self.k - 1) * n_programs * (
-            self.h_max // 2 + self.FUSED_SCALE_BYTES)
+            h8 // 2 + self.FUSED_SCALE_BYTES)
 
     def comm_bytes_exchange(self, exchange: str, *, lossy: bool = True,
                             value_bytes: int = 4) -> int:
@@ -135,6 +191,10 @@ class PartitionLayout:
             return self.comm_bytes_halo_quantized()
         if exchange in ("halo", "quantized"):
             return self.comm_bytes_halo(value_bytes)
+        if exchange == "ragged_quantized" and lossy:
+            return self.comm_bytes_ragged_quantized()
+        if exchange in ("ragged", "ragged_quantized"):
+            return self.comm_bytes_ragged(value_bytes)
         raise ValueError(
             f"unknown exchange {exchange!r}; expected one of "
             f"{sorted(self.EXCHANGE_TABLES)}")
@@ -288,6 +348,8 @@ def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
     halo_recv = np.full((k, k, h_max), l_max, dtype=np.int32)
     halo_send[mp_[po], mq[po], lane] = m_slot[po]
     halo_recv[mq[po], mp_[po], lane] = m_own_slot[po]
+    halo_cnt = np.bincount(pair, minlength=k * k).reshape(k, k) \
+        .astype(np.int32)
 
     replic = np.bincount(uv, minlength=num_vertices)
     mirrors_total = int(np.maximum(replic - 1, 0).sum())
@@ -298,7 +360,8 @@ def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
         edge_mask=edge_mask, vert_gid=vert_gid, vert_mask=vert_mask,
         is_master=is_master, owner=owner, own_slot=own_slot,
         red_index=red_index, out_deg=out_deg, halo_send=halo_send,
-        halo_recv=halo_recv, mirrors_total=mirrors_total)
+        halo_recv=halo_recv, halo_cnt=halo_cnt,
+        mirrors_total=mirrors_total)
 
 
 def build_layout_reference(src: np.ndarray, dst: np.ndarray,
@@ -401,7 +464,9 @@ def build_layout_reference(src: np.ndarray, dst: np.ndarray,
     h_max = _pad_to(h_max, pad_multiple)
     halo_send = np.full((k, k, h_max), l_max, dtype=np.int32)
     halo_recv = np.full((k, k, h_max), l_max, dtype=np.int32)
+    halo_cnt = np.zeros((k, k), dtype=np.int32)
     for (p, o), lanes in pair_lanes.items():
+        halo_cnt[p, o] = len(lanes)
         for h, (sl, osl) in enumerate(lanes):
             halo_send[p, o, h] = sl
             halo_recv[o, p, h] = osl
@@ -417,4 +482,5 @@ def build_layout_reference(src: np.ndarray, dst: np.ndarray,
         edge_mask=edge_mask, vert_gid=vert_gid, vert_mask=vert_mask,
         is_master=is_master, owner=owner, own_slot=own_slot,
         red_index=red_index, out_deg=out_deg, halo_send=halo_send,
-        halo_recv=halo_recv, mirrors_total=mirrors_total)
+        halo_recv=halo_recv, halo_cnt=halo_cnt,
+        mirrors_total=mirrors_total)

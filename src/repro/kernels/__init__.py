@@ -1,3 +1,4 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
 from . import ops, ref  # noqa: F401
-from .ops import flash_attention, game_best_response, ell_spmv  # noqa: F401
+from .ops import (flash_attention, game_best_response, ell_spmv,  # noqa: F401
+                  cluster_scatter)

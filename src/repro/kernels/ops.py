@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention as _flash
 from .game_bestresponse import game_bestresponse as _gbr
 from .ell_spmv import ell_spmv as _spmv
+from .cluster_scatter import cluster_scatter as _cscat
 
 _ON_TPU = jax.default_backend() == "tpu"
 DEFAULT_INTERPRET = not _ON_TPU
@@ -40,3 +41,13 @@ def game_best_response(aff, sizes, row_tot, cur, loads, lam,
 def ell_spmv(vals, cols, x, block_m: int = 256,
              interpret: bool = DEFAULT_INTERPRET):
     return _spmv(vals, cols, x, block_m=block_m, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("allow_split", "split_degree_factor",
+                                   "interpret"))
+def cluster_scatter(ints, buf, scal, vmax, allow_split: bool = True,
+                    split_degree_factor: float = 0.0,
+                    interpret: bool = DEFAULT_INTERPRET):
+    return _cscat(ints, buf, scal, vmax, allow_split=allow_split,
+                  split_degree_factor=split_degree_factor,
+                  interpret=interpret)

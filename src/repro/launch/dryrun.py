@@ -298,7 +298,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     return rec
 
 
-GRAPH_EXCHANGES = ("dense", "halo", "quantized")
+GRAPH_EXCHANGES = ("dense", "halo", "quantized", "ragged",
+                   "ragged_quantized")
+# the padded all_to_all backends count a self lane in their HLO output
+# shape that never crosses the wire; the ragged ppermute ring has no
+# self hop, so its HLO bytes ARE the wire bytes
+SELF_LANE_EXCHANGES = ("halo", "quantized")
 # the fused-vs-separate CI gate compiles this homogeneous (f32, sum)
 # bundle as ONE fused step and compares its wire bytes against the sum
 # of the three separate quantized steps (threshold FUSED_GATE_RATIO)
@@ -309,13 +314,9 @@ FUSED_GATE_RATIO = 0.6
 def _graph_comm_model(lay, exchange: str, lossy: bool) -> int:
     """The layout's modelled bytes/iter for one (program, backend) cell.
     ``lossy`` is ``halo.lossy_payload(program.combine, program.dtype)`` —
-    min/int programs (CC labels) ship the exact full-width halo payload on
-    the quantized backend, so their model is the plain halo volume."""
-    if exchange == "dense":
-        return lay.comm_bytes_mirror_sync()
-    if exchange == "quantized" and lossy:
-        return lay.comm_bytes_halo_quantized()
-    return lay.comm_bytes_halo()
+    min/int programs (CC labels) ship the exact full-width payload on
+    the quantized backends, so their model is the exact-wire volume."""
+    return lay.comm_bytes_exchange(exchange, lossy=lossy)
 
 
 def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
@@ -373,8 +374,10 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
             # by the HLO output shape, never on the wire) carries one
             # lane group's payload: model / (2 phases × k·(k−1) groups)
             # — which generalizes to the fused cell's N-program rows.
+            # The ragged ppermute ring has no self hop (distances run
+            # 1..k−1), and dense all_gathers none either: correction 0.
             self_lane = (rec["comm_bytes_model"] // (2 * k * (k - 1))
-                         if exchange != "dense" else 0)
+                         if exchange in SELF_LANE_EXCHANGES else 0)
             wire = total - 2 * k * self_lane
             rec.update({
                 "status": "ok",
@@ -410,8 +413,12 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
             d = ok["dense"]["collective_bytes_wire"]
             h = ok["halo"]["collective_bytes_wire"]
             q = ok["quantized"]["collective_bytes_wire"]
+            rg = ok["ragged"]["collective_bytes_wire"]
+            rq = ok["ragged_quantized"]["collective_bytes_wire"]
             print(f"  {pname}: dense→halo {h / max(d, 1):.3f}×  "
                   f"halo→quantized {q / max(h, 1):.3f}×  "
+                  f"halo→ragged {rg / max(h, 1):.3f}×  "
+                  f"quantized→ragged_q {rq / max(q, 1):.3f}×  "
                   f"(ideal/dense = "
                   f"{ok['dense']['comm_bytes_ideal'] / max(d, 1):.3f})")
 
@@ -450,30 +457,48 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
 def check_graph_ordering(recs: list[dict]) -> list[str]:
     """The CI regression gate on the paper's headline quantity: **per
     program**, measured wire bytes/iter must order quantized < halo <
-    dense.  Programs whose quantized cell ships an exact payload (min/int
-    — the record's ``lossy_payload`` flag, derived from the program spec)
-    allow quantized == halo.  Fused rows (``fused: true``) are excluded
-    from the per-program ordering and instead gate the fused win: the
-    fused step's wire bytes must be < ``FUSED_GATE_RATIO`` × the sum of
-    its bundle programs' separate quantized steps.  Returns the list of
-    violations (empty == pass)."""
+    dense, and the ragged ring must never ship more than its padded
+    counterpart: ragged ≤ halo (equality only when every distance's lane
+    count is already H_max) and, for lossy payloads, ragged_quantized <
+    quantized.  Programs whose quantized cells ship an exact payload
+    (min/int — the record's ``lossy_payload`` flag, derived from the
+    program spec) allow quantized == halo and require ragged_quantized ==
+    ragged (the non-lossy ragged_quantized path delegates to the exact
+    ring).  ragged_quantized vs ragged is deliberately NOT gated: at tiny
+    per-hop lane counts the index+scale overhead (3·T+4 vs 4·H bytes)
+    can exceed the exact payload.  Fused rows (``fused: true``) are
+    excluded from the per-program ordering and instead gate the fused
+    win: the fused step's wire bytes must be < ``FUSED_GATE_RATIO`` × the
+    sum of its bundle programs' separate quantized steps.  Returns the
+    list of violations (empty == pass)."""
     msgs = [f"{r.get('program', '?')}/{r.get('exchange', '?')}: "
             f"{r.get('status')}"
             for r in recs if r.get("status") != "ok"]
     by = {(r["program"], r["exchange"]): r
           for r in recs if r.get("status") == "ok" and not r.get("fused")}
     for prog in sorted({p for p, _ in by}):
-        cells = [by.get((prog, e)) for e in GRAPH_EXCHANGES]
-        if None in cells:
+        cells = {e: by.get((prog, e)) for e in GRAPH_EXCHANGES}
+        if any(c is None for c in cells.values()):
             continue    # the missing cell is already reported above
-        d, h, q = (c["collective_bytes_wire"] for c in cells)
+        wire = {e: c["collective_bytes_wire"] for e, c in cells.items()}
+        d, h, q = wire["dense"], wire["halo"], wire["quantized"]
+        rg, rq = wire["ragged"], wire["ragged_quantized"]
         if h >= d:
             msgs.append(f"{prog}: halo bytes/iter {h} ≥ dense {d}")
-        if cells[2].get("lossy_payload", True):
+        if rg > h:
+            msgs.append(f"{prog}: ragged bytes/iter {rg} > halo {h}")
+        if cells["quantized"].get("lossy_payload", True):
             if q >= h:
                 msgs.append(f"{prog}: quantized bytes/iter {q} ≥ halo {h}")
-        elif q > h:
-            msgs.append(f"{prog}: quantized bytes/iter {q} > halo {h}")
+            if rq >= q:
+                msgs.append(f"{prog}: ragged_quantized bytes/iter {rq} "
+                            f"≥ quantized {q}")
+        else:
+            if q > h:
+                msgs.append(f"{prog}: quantized bytes/iter {q} > halo {h}")
+            if rq != rg:
+                msgs.append(f"{prog}: exact-payload ragged_quantized "
+                            f"bytes/iter {rq} != ragged {rg}")
     for r in recs:
         if not r.get("fused") or r.get("status") != "ok":
             continue
@@ -592,9 +617,11 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="with --graph: exit 1 unless measured wire bytes "
                          "order quantized < halo < dense per program "
-                         "(exact int payloads allow quantized == halo) "
-                         "AND the fused bundle ships < 0.6× the bytes of "
-                         "its separate quantized steps")
+                         "(exact int payloads allow quantized == halo), "
+                         "ragged ≤ halo and ragged_quantized < quantized "
+                         "(== ragged for exact payloads), AND the fused "
+                         "bundle ships < 0.6× the bytes of its separate "
+                         "quantized steps")
     ap.add_argument("--compress-grads", action="store_true",
                     help="train cells: int8 gradient quantization; also "
                          "compiles the uncompressed step and prints the "
@@ -619,8 +646,9 @@ def main():
             for m in msgs:
                 print(f"collective-bytes gate: {m}", file=sys.stderr)
             if not msgs:
-                print("collective-bytes gate: quantized < halo < dense "
-                      "holds for every program, and the fused bundle "
+                print("collective-bytes gate: quantized < halo < dense, "
+                      "ragged ≤ halo and ragged_quantized < quantized "
+                      "hold for every program, and the fused bundle "
                       f"ships < {FUSED_GATE_RATIO}× its separate steps")
             sys.exit(1 if msgs else 0)
         sys.exit(1 if n_fail else 0)

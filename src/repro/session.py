@@ -39,7 +39,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .core import metrics
-from .core.partitioner import BACKENDS, partition
+from .core.partitioner import BACKENDS, partition, partition_sweep
 from .core.pipeline import CLUGPConfig, CLUGPResult
 from .dist.halo import lossy_payload
 from .graph import (GASProgram, PROGRAM_NAMES, PartitionLayout,
@@ -47,7 +47,7 @@ from .graph import (GASProgram, PROGRAM_NAMES, PartitionLayout,
                     get_program, shard_map_gas, shard_map_gas_many,
                     simulate_gas, simulate_gas_many)
 
-EXCHANGES = ("dense", "halo", "quantized")
+EXCHANGES = ("dense", "halo", "quantized", "ragged", "ragged_quantized")
 PROGRAMS = PROGRAM_NAMES
 
 
@@ -143,6 +143,24 @@ class GraphSession:
                                 nodes=self.cfg.nodes, mesh=mesh)
         return self
 
+    def run_sweep(self, src, dst, num_vertices: int, ks) -> dict:
+        """Partition the stream at every ``k`` in ``ks`` under ONE
+        compiled stacked body (``repro.core.partition_sweep`` — jit
+        semantics, k_max-padded lanes, traced per-step k).  Returns
+        ``{k: CLUGPResult}`` in input order and leaves the session on the
+        LAST k's partition, ready for ``layout()``/``run()``; re-run
+        ``partition`` or adopt another sweep entry via ``with_partition``
+        to work on a different k."""
+        self._adopt_graph(src, dst, num_vertices)
+        results = partition_sweep(self._src, self._dst,
+                                  self._num_vertices, self.cfg.clugp, ks)
+        table = dict(zip((int(k) for k in ks), results))
+        last_k = int(tuple(ks)[-1])
+        self.cfg = dataclasses.replace(
+            self.cfg, clugp=dataclasses.replace(self.cfg.clugp, k=last_k))
+        self.result = table[last_k]
+        return table
+
     def with_partition(self, src, dst, num_vertices: int,
                        assign) -> "GraphSession":
         """Adopt an externally computed edge→partition assignment (e.g. a
@@ -205,7 +223,9 @@ class GraphSession:
         baseline (the Fig. 8 accounting)."""
         lay = self.partition_layout
         return {"ideal": lay.comm_bytes_ideal(),
+                "ragged_quantized": lay.comm_bytes_ragged_quantized(),
                 "quantized": lay.comm_bytes_halo_quantized(),
+                "ragged": lay.comm_bytes_ragged(),
                 "halo": lay.comm_bytes_halo(),
                 "dense_gather": lay.comm_bytes_mirror_sync(),
                 "allreduce": lay.comm_bytes_dense()}

@@ -45,6 +45,27 @@ def test_quantized_pagerank_on_clugp_partition():
     assert np.abs(pr_q - ref).max() < 1e-5
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ragged_quantized_pagerank_converges_not_diverges(seed):
+    """Divergence regression for the top-Δ encoder: sparsified error
+    feedback must NOT carry a separate residual (the outstanding delta
+    lanes − sref already contains every un-sent lane; re-adding a carry
+    doubles them each round, which blew up ~2× per iteration).  The fix
+    makes the error strictly SHRINK with more iterations — the old
+    encoder passed loose 30-iter checks while exploding by iter 100."""
+    src, dst, n, assign = _random_graph_and_assign(seed, 8, n=400)
+    lay = build_layout(src, dst, assign, n, 8)
+    errs = {}
+    for iters in (30, 100):
+        ref = reference_pagerank(src, dst, n, iters=iters)
+        pr = simulate_pagerank(lay, iters=iters,
+                               exchange="ragged_quantized")
+        errs[iters] = np.abs(pr - ref).max()
+    assert errs[30] < 1e-3, errs
+    assert errs[100] < 1e-6, errs
+    assert errs[100] < errs[30], errs
+
+
 # ------------------------------------------------- exact int32 CC path
 
 @pytest.mark.parametrize("seed", [0, 1])
@@ -104,21 +125,62 @@ def test_dryrun_ordering_gate_flags_regressions():
         return {"program": program, "exchange": exchange, "status": "ok",
                 "lossy_payload": lossy, "collective_bytes_wire": wire}
 
-    good = [rec("pagerank", "dense", 100), rec("pagerank", "halo", 40),
-            rec("pagerank", "quantized", 12),
-            rec("cc", "dense", 100), rec("cc", "halo", 40),
-            # cc ships the exact payload → quantized == halo is allowed
-            rec("cc", "quantized", 40, lossy=False)]
+    def prog(name, d, h, q, rg, rq, lossy=True):
+        return [rec(name, "dense", d, lossy), rec(name, "halo", h, lossy),
+                rec(name, "quantized", q, lossy),
+                rec(name, "ragged", rg, lossy),
+                rec(name, "ragged_quantized", rq, lossy)]
+
+    # lossy: quantized < halo < dense, ragged ≤ halo, ragged_q < quantized;
+    # exact: quantized == halo and ragged_quantized == ragged are allowed
+    good = prog("pagerank", 100, 40, 12, 30, 9) + \
+        prog("cc", 100, 40, 40, 30, 30, lossy=False)
     assert check_graph_ordering(good) == []
-    bad = [rec("pagerank", "dense", 100), rec("pagerank", "halo", 100),
-           rec("pagerank", "quantized", 100)]
-    assert len(check_graph_ordering(bad)) == 2
+    bad = prog("pagerank", 100, 100, 100, 100, 100)
+    # halo ≥ dense, quantized ≥ halo, ragged_quantized ≥ quantized
+    assert len(check_graph_ordering(bad)) == 3
     # a lossy program's quantized cell must be strictly below halo
-    tie = good[:2] + [rec("pagerank", "quantized", 40)]
+    tie = prog("pagerank", 100, 40, 40, 30, 9)
     assert len(check_graph_ordering(tie)) == 1
-    failed = good[:5] + [{"program": "cc", "exchange": "quantized",
+    # the ragged ring may never ship more than the padded halo wire
+    fat = prog("pagerank", 100, 40, 12, 41, 9)
+    assert any("ragged" in m for m in check_graph_ordering(fat))
+    # exact payloads must ride the exact ring: ragged_quantized != ragged
+    drift = prog("cc", 100, 40, 40, 30, 29, lossy=False)
+    assert any("exact-payload" in m for m in check_graph_ordering(drift))
+    # ragged_quantized vs ragged is deliberately ungated for lossy rows
+    # (index+scale overhead can exceed tiny exact hops)
+    over = prog("pagerank", 100, 40, 12, 8, 9)
+    assert check_graph_ordering(over) == []
+    failed = good[:9] + [{"program": "cc", "exchange": "ragged_quantized",
                           "status": "FAIL: boom"}]
     assert any("boom" in m for m in check_graph_ordering(failed))
+
+
+# ------------------------------------------------- int4 group quantizer
+
+def test_quantize_groups_pads_non_multiple_of_8_rows():
+    """Regression: lane rows whose width is not a multiple of the 8
+    scale subgroups (layouts built with pad_multiple < 8, or ragged hop
+    widths) must zero-pad up to one before grouping — the quantizer once
+    required divisibility and broke on any other width.  Pad lanes
+    quantize to code 0, the trailing dim stays even for the nibble pack,
+    and the real lanes round-trip within half a group's grid step."""
+    from repro.dist.halo import (_NUM_SCALE_GROUPS, _dequantize_groups,
+                                 _quantize_groups)
+
+    rng = np.random.default_rng(0)
+    for h in (1, 3, 7, 9, 20, 61):
+        err = rng.standard_normal((5, h)).astype(np.float32)
+        codes, scales = _quantize_groups(jnp.asarray(err))
+        codes = np.asarray(codes)
+        assert codes.shape[-1] % _NUM_SCALE_GROUPS == 0, h
+        assert codes.shape[-1] % 2 == 0, h
+        assert not codes[..., h:].any(), h
+        deq = np.asarray(_dequantize_groups(
+            jnp.asarray(codes), scales))[..., :h]
+        tol = float(np.asarray(scales).max()) / 2 + 1e-6
+        assert np.abs(deq - err).max() <= tol, h
 
 
 # the int8 lane round-trip property tests (hypothesis) live in

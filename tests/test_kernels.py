@@ -144,6 +144,107 @@ def test_ell_spmv_matches_ref(R, W, N, dtype):
                                atol=tol)
 
 
+# ----------------------------------------------------- cluster scatter
+
+def _cluster_block_inputs(seed, B=128, sdf=0.0):
+    """A localized clustering block with realistic slot aliasing: random
+    vertex slots in [0, 2B), some dead lanes, a mid-stream table state."""
+    rng = np.random.default_rng(seed)
+    lu = rng.integers(0, 2 * B, B).astype(np.int32)
+    lv = rng.integers(0, 2 * B, B).astype(np.int32)
+    live = (rng.random(B) > 0.1).astype(np.int32)
+    lv = np.where(live == 1, lv, lu)          # dead lanes alias u == v
+    ints = np.stack([lu, lv, live], 1)
+    buf = np.full(10 * B, -1, np.int32)
+    buf[2 * B:4 * B] = rng.integers(0, 6, 2 * B)
+    buf[4 * B:10 * B] = 0
+    # pre-cluster a third of the slots into a few existing local clusters
+    pre = rng.choice(2 * B, 2 * B // 3, replace=False)
+    cl = rng.integers(2 * B, 2 * B + 16, pre.size)
+    buf[pre] = cl
+    np.add.at(buf, 2 * B + cl, rng.integers(1, 8, pre.size))
+    scal = np.array([16, 0, pre.size, int(buf[2*B:4*B].sum())], np.int32)
+    return jnp.asarray(ints), jnp.asarray(buf), jnp.asarray(scal)
+
+
+def _cluster_scan_ref(ints, buf, scal, vmax, allow_split, sdf):
+    """Oracle: the XLA inner scan (`.at[].add` fused scatter) over the
+    same `edge_decisions` math."""
+    from functools import partial
+    from repro.core.clustering import _edge_step_local
+    B = ints.shape[0]
+    step = partial(_edge_step_local, vmax=jnp.float32(vmax),
+                   allow_split=allow_split, split_degree_factor=sdf, B=B)
+    (buf2, nid, nid0, sv, sd), fires = jax.lax.scan(
+        step, (buf, scal[0], scal[1], scal[2], scal[3]), ints)
+    return buf2, jnp.stack([nid, nid0, sv, sd]), fires
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("sdf", [0.0, 4.0])
+def test_cluster_scatter_matches_xla_scan(seed, sdf):
+    ints, buf, scal = _cluster_block_inputs(seed, sdf=sdf)
+    vmax = 12.5
+    got_buf, got_scal, got_pk = ops.cluster_scatter(
+        ints, buf, scal, vmax, allow_split=True, split_degree_factor=sdf,
+        interpret=True)
+    want_buf, want_scal, want_pk = _cluster_scan_ref(
+        ints, buf, scal, vmax, True, sdf)
+    np.testing.assert_array_equal(np.asarray(got_buf), np.asarray(want_buf))
+    np.testing.assert_array_equal(np.asarray(got_scal), np.asarray(want_scal))
+    np.testing.assert_array_equal(np.asarray(got_pk), np.asarray(want_pk))
+
+
+def test_cluster_scatter_no_split_matches_xla_scan():
+    ints, buf, scal = _cluster_block_inputs(7)
+    got = ops.cluster_scatter(ints, buf, scal, 9.0, allow_split=False,
+                              interpret=True)
+    want = _cluster_scan_ref(ints, buf, scal, 9.0, False, 0.0)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_cluster_kernel_full_stream_matches_xla():
+    """Whole clustering pass (block localization + carry across blocks)
+    is bit-identical between the Pallas strategy and the XLA scan."""
+    from repro.core import web_graph
+    from repro.core.clustering import streaming_clustering_jax, default_vmax
+    g = web_graph(scale=10, edge_factor=5, seed=4)
+    vmax = default_vmax(g.num_edges, 8)
+    for sdf in (0.0, 4.0):
+        outs = {}
+        for kern in ("xla", "pallas"):
+            outs[kern] = streaming_clustering_jax(
+                g.src, g.dst, g.num_vertices, vmax,
+                split_degree_factor=sdf, kernel=kern, interpret=True)
+        for a, b in zip(outs["xla"], outs["pallas"]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resolve_cluster_kernel():
+    from repro.core.stages import resolve_cluster_kernel
+    assert resolve_cluster_kernel("pallas") == "pallas"
+    assert resolve_cluster_kernel("xla") == "xla"
+    assert resolve_cluster_kernel("auto") in ("pallas", "xla")
+    with pytest.raises(ValueError):
+        resolve_cluster_kernel("scan")
+
+
+def test_partition_cluster_kernel_bit_identical():
+    """cluster_kernel='pallas' flows through CLUGPConfig → jit backend and
+    lands the exact same assignment as the XLA scatter path."""
+    from repro.core.partitioner import partition
+    from repro.core.pipeline import CLUGPConfig
+    from repro.core import web_graph
+    g = web_graph(scale=9, edge_factor=5, seed=2)
+    res = {}
+    for kern in ("xla", "pallas"):
+        r = partition(g.src, g.dst, g.num_vertices,
+                      CLUGPConfig(k=4, cluster_kernel=kern), backend="jit")
+        res[kern] = r.assign
+    np.testing.assert_array_equal(res["xla"], res["pallas"])
+
+
 def test_ell_spmv_is_pagerank_gather():
     """Kernel reproduces the engine's segment_sum local aggregate."""
     rng = np.random.default_rng(3)

@@ -6,11 +6,13 @@ restream priors) and within tolerance where the game RNG differs;
 "sharded" is exercised in a multi-device subprocess and judged against
 the same-split-width np combine.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core import (CLUGPConfig, partition, clugp_partition_parallel,
-                        web_graph)
+                        partition_sweep, sweep_trace_count, web_graph)
 
 
 @pytest.fixture(scope="module")
@@ -149,6 +151,48 @@ def test_restream_improves_jit_too(graph10):
     once = partition(g.src, g.dst, g.num_vertices,
                      CLUGPConfig(k=8, restream=1), backend="jit")
     assert once.stats["rf"] < base.stats["rf"]
+
+
+# --------------------------------------------------- compile-once k-sweep
+
+def test_sweep_matches_per_k_jit_bitwise(graph10):
+    """The stacked k-sweep (every k under ONE ``lax.scan`` body, lanes
+    padded to k_max with a traced live count) must reproduce the per-k
+    jit backend BIT-FOR-BIT at every k — dead-lane masking may never
+    leak into a live partition's argmin, λ, or balance cap."""
+    g = graph10
+    ks = (4, 8)
+    cfg = CLUGPConfig(k=ks[-1])
+    results = partition_sweep(g.src, g.dst, g.num_vertices, cfg, ks)
+    for k, res in zip(ks, results):
+        ref = partition(g.src, g.dst, g.num_vertices,
+                        dataclasses.replace(cfg, k=k), backend="jit")
+        np.testing.assert_array_equal(res.assign, ref.assign,
+                                      err_msg=f"k={k}")
+        assert res.assign.min() >= 0 and res.assign.max() < k
+        assert res.stats["rf"] == ref.stats["rf"]
+        assert res.stats["sweep"] and res.stats["k_max"] == ks[-1]
+
+
+def test_sweep_repeat_adds_zero_compiles(graph10):
+    """Compile-once contract: a warm repeat of the sweep (same stream
+    shape, same ks) reuses the cached executable — the traced k_real /
+    vmax inputs keep per-k variation out of the jit cache key."""
+    g = graph10
+    cfg = CLUGPConfig(k=8)
+    partition_sweep(g.src, g.dst, g.num_vertices, cfg, (4, 8))
+    before = sweep_trace_count()
+    again = partition_sweep(g.src, g.dst, g.num_vertices, cfg, (4, 8))
+    assert sweep_trace_count() == before
+    assert len(again) == 2
+
+
+def test_sweep_validates_ks(graph10):
+    g = graph10
+    for bad in ((), (0, 4), (-1,)):
+        with pytest.raises(ValueError, match="at least one k"):
+            partition_sweep(g.src, g.dst, g.num_vertices,
+                            CLUGPConfig(k=4), bad)
 
 
 # ------------------------------------------------------- np nodes combine

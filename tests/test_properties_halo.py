@@ -13,8 +13,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.dist.compress import dequantize_rows, quantize_rows  # noqa: E402
-from repro.dist.halo import _pack  # noqa: E402
+from repro.dist.halo import _pack, get_exchange  # noqa: E402
 from repro.graph import build_layout, get_program, simulate_gas  # noqa: E402
+from repro.graph.engine import _stack_dev  # noqa: E402
 
 from conftest import random_graph_and_assign  # noqa: E402
 
@@ -78,20 +79,47 @@ def test_int8_pack_unpack_roundtrip_through_halo_tables(seed):
                 float(np.asarray(scales).max()) / 2 + 1e-6
 
 
+@given(st.integers(0, 2**16), st.integers(2, 8))
+@settings(max_examples=15, deadline=None)
+def test_ragged_ring_routes_every_mirror_exactly_once(seed, k):
+    """The ragged ppermute ring is a pure re-routing of the padded halo
+    all_to_all.  Small-integer fp32 payloads make the check exact: their
+    sums are the same whatever the association order, so if any mirror
+    lane were dropped, duplicated, or delivered to the wrong slot by the
+    per-distance prefix slicing, the stacked reduce or broadcast would
+    differ from the halo wire — instead both phases agree BIT-FOR-BIT on
+    any random graph/assignment."""
+    src, dst, n, assign = random_graph_and_assign(seed, k, n=200)
+    lay = build_layout(src, dst, assign, n, k)
+    rng = np.random.default_rng(seed + 7)
+    partials = jnp.asarray(
+        rng.integers(0, 512, (k, lay.l_max)).astype(np.float32))
+    outs = {}
+    for name in ("halo", "ragged"):
+        ex = get_exchange(name, layout=lay)
+        dev = _stack_dev(lay, name)
+        red, _ = ex.reduce_stacked(partials, dev, combine="sum")
+        bro, _ = ex.broadcast_stacked(red, dev, combine="sum")
+        outs[name] = (np.asarray(red), np.asarray(bro))
+    np.testing.assert_array_equal(outs["ragged"][0], outs["halo"][0])
+    np.testing.assert_array_equal(outs["ragged"][1], outs["halo"][1])
+
+
 @given(st.integers(0, 2**16), st.sampled_from(["sssp", "labelprop"]),
        st.integers(2, 8))
 @settings(max_examples=10, deadline=None)
 def test_int_programs_exchange_invariant(seed, name, k):
     """Exchange invariance for exact (min/int) payloads: SSSP distances
-    and labelprop labels are bit-identical under dense, halo AND
-    quantized wires on any random graph/assignment — the quantized
-    backend's error-feedback path is bypassed for non-lossy payloads, so
-    compression can never perturb an int frontier."""
+    and labelprop labels are bit-identical under dense, halo, quantized
+    AND both ragged wires on any random graph/assignment — the lossy
+    backends' error-feedback paths are bypassed for non-lossy payloads
+    (``ragged_quantized`` delegates to the exact ring), so compression
+    can never perturb an int frontier."""
     src, dst, n, assign = random_graph_and_assign(seed, k, n=150)
     lay = build_layout(src, dst, assign, n, k)
     prog = get_program(name, n)
     dense = simulate_gas(prog, lay, iters=25, exchange="dense")
-    for exchange in ("halo", "quantized"):
+    for exchange in ("halo", "quantized", "ragged", "ragged_quantized"):
         got = simulate_gas(prog, lay, iters=25, exchange=exchange)
         np.testing.assert_array_equal(got, dense,
                                       err_msg=f"{name}/{exchange}")

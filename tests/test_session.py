@@ -145,6 +145,24 @@ def test_comm_bytes_programs_and_fused(graph10):
     assert fused < 3 * table["pagerank"]["quantized"]
 
 
+def test_run_sweep_lands_on_last_k(graph10):
+    """run_sweep: one compiled stacked body partitions at every k, the
+    returned table matches the jit backend per k, and the session is left
+    on the LAST k's partition ready for layout()/run()."""
+    g = graph10
+    ks = (4, 8)
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=2)))
+    table = sess.run_sweep(g.src, g.dst, g.num_vertices, ks)
+    assert sorted(table) == list(ks)
+    for k in ks:
+        ref = partition(g.src, g.dst, g.num_vertices,
+                        CLUGPConfig(k=k), backend="jit")
+        np.testing.assert_array_equal(table[k].assign, ref.assign)
+    assert sess.k == ks[-1]
+    np.testing.assert_array_equal(sess.assign, table[ks[-1]].assign)
+    assert sess.partition_layout.k == ks[-1]
+
+
 def test_with_partition_external_assignment(graph10):
     g = graph10
     rng = np.random.default_rng(0)
