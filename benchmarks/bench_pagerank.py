@@ -37,13 +37,13 @@ def fig8_pagerank(scale=11, k=8, iters=20, seed=0):
         ref = reference_pagerank(src, dst, g.num_vertices, iters=iters)
         row = {
             "bench": "fig8_pagerank", "algo": algo, "k": k,
-            "comm_mb_per_iter": round(lay.comm_bytes_ideal() / 1e6, 4),
+            "comm_mb_per_iter": round(lay.comm_bytes("ideal") / 1e6, 4),
             "comm_mb_dense_padded": round(
-                lay.comm_bytes_mirror_sync() / 1e6, 4),
-            "comm_mb_halo_padded": round(lay.comm_bytes_halo() / 1e6, 4),
+                lay.comm_bytes("dense") / 1e6, 4),
+            "comm_mb_halo_padded": round(lay.comm_bytes("halo") / 1e6, 4),
             "comm_mb_halo_quantized": round(
-                lay.comm_bytes_halo_quantized() / 1e6, 4),
-            "comm_dense_mb": round(lay.comm_bytes_dense() / 1e6, 4),
+                lay.comm_bytes("quantized") / 1e6, 4),
+            "comm_dense_mb": round(lay.comm_bytes("allreduce") / 1e6, 4),
             "local_edges_max": int(lay.e_max),
             "mirrors": int(lay.mirrors_total),
         }
@@ -106,10 +106,10 @@ def program_matrix_bench(scale=10, k=8, iters=20, seed=0):
         rows.append({
             "bench": "program_matrix", "program": name, "k": k,
             "fused": False, "lossy_payload": lossy,
-            "comm_mb_dense": round(lay.comm_bytes_mirror_sync() / 1e6, 4),
-            "comm_mb_halo": round(lay.comm_bytes_halo() / 1e6, 4),
+            "comm_mb_dense": round(lay.comm_bytes("dense") / 1e6, 4),
+            "comm_mb_halo": round(lay.comm_bytes("halo") / 1e6, 4),
             "comm_mb_quantized": round(
-                lay.comm_bytes_exchange("quantized", lossy=lossy) / 1e6, 4),
+                lay.comm_bytes("quantized", lossy=lossy) / 1e6, 4),
             "engine_seconds_quantized": round(dt, 3),
             "max_err_quantized": err,
         })
@@ -121,9 +121,10 @@ def program_matrix_bench(scale=10, k=8, iters=20, seed=0):
     for name, got in zip(FUSED_BUNDLE, outs):
         ref = _REF[name](g.src, g.dst, g.num_vertices, iters)
         assert float(np.abs(got - ref).max()) < 1e-3, name
-    fused_mb = lay.comm_bytes_fused(len(progs), "quantized") / 1e6
-    sep_mb = len(progs) * lay.comm_bytes_exchange("quantized",
-                                                  lossy=True) / 1e6
+    fused_mb = lay.comm_bytes("quantized", programs=len(progs),
+                              fused=True) / 1e6
+    sep_mb = lay.comm_bytes("quantized", programs=len(progs),
+                            lossy=True) / 1e6
     rows.append({
         "bench": "program_matrix", "program": "+".join(FUSED_BUNDLE),
         "k": k, "fused": True, "lossy_payload": True,

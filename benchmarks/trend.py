@@ -41,7 +41,12 @@ GOOD_UP_HINTS = ("speedup",)
 # counts jit compilations of the stacked k-sweep — fewer is the whole
 # point of compile-once batching
 GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us",
-                   "us_per_edge", "compiles")
+                   "us_per_edge", "compiles", "query_ms", "rf_")
+# "query_ms" is the serve artifact's per-query latency (best-effort warm
+# measurement, the row's whole point — diffs lower-is-better instead of
+# hiding as noise) and "rf_" its replication watermarks (rf_base /
+# rf_drifted / rf_post_restream): a quality regression in the serving
+# drift/repair path must always surface
 # numeric fields that identify a row rather than measure it — part of the
 # match key, never diffed (fig3/fig7 emit one row per k with identical
 # string fields, so k etc. must disambiguate; "program"/"fused" key the
@@ -50,7 +55,7 @@ GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us",
 # cluster-scatter / game kernel-identity cells)
 IDENTITY_FIELDS = ("k", "scale", "iters", "seed", "shards", "E", "K",
                    "n_nodes", "exchange", "nodes", "restream", "backend",
-                   "unroll", "program", "fused", "kernel")
+                   "unroll", "program", "fused", "kernel", "window")
 # identity fields added after a baseline was recorded get a default, so
 # pre-existing artifacts (rows without the key) still match their
 # successors instead of degenerating into removed-row/new-row noise

@@ -28,10 +28,10 @@ print(f"{'partitioner':10s} {'mirrors':>9s} {'ideal MB/it':>12s} "
       f"{'quant MB/it':>12s} {'halo MB/it':>11s} {'dense MB/it':>12s}")
 for name, lay in (("clugp", lay_clugp), ("hashing", lay_hash)):
     print(f"{name:10s} {lay.mirrors_total:>9d} "
-          f"{lay.comm_bytes_ideal()/1e6:>12.3f} "
-          f"{lay.comm_bytes_halo_quantized()/1e6:>12.3f} "
-          f"{lay.comm_bytes_halo()/1e6:>11.3f} "
-          f"{lay.comm_bytes_mirror_sync()/1e6:>12.3f}")
+          f"{lay.comm_bytes('ideal')/1e6:>12.3f} "
+          f"{lay.comm_bytes('quantized')/1e6:>12.3f} "
+          f"{lay.comm_bytes('halo')/1e6:>11.3f} "
+          f"{lay.comm_bytes('dense')/1e6:>12.3f}")
 
 ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
 for exchange in ("halo", "quantized"):

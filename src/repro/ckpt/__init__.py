@@ -1,1 +1,2 @@
-from .checkpoint import save, restore, restore_latest, list_steps  # noqa: F401
+from .checkpoint import (save, restore, restore_raw,  # noqa: F401
+                         restore_latest, list_steps)

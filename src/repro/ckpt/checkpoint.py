@@ -96,6 +96,18 @@ def restore(path: str | Path, step: int, target_tree, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_raw(path: str | Path, step: int):
+    """Shape-blind restore: the stored flat ``{keystr: np.ndarray}`` map
+    plus the manifest — no target tree, no shape asserts.  For services
+    whose array sizes grow between snapshots (live edge ingest): the
+    template-checked ``restore`` would reject a snapshot taken after the
+    graph grew."""
+    path = Path(path) / f"step_{step:08d}"
+    data = np.load(path / "arrays.npz")
+    manifest = json.loads((path / "manifest.json").read_text())
+    return {k: data[k] for k in data.files}, manifest
+
+
 def restore_latest(path: str | Path, target_tree, shardings=None):
     steps = list_steps(path)
     if not steps:

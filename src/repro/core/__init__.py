@@ -8,11 +8,11 @@ from .game import (contract, best_response_rounds, greedy_assign,  # noqa: F401
                    ClusterGraph, GameResult)
 from .transform import (transform_np, transform_jax,  # noqa: F401
                         majority_vertex_map_np, majority_vertex_map_jax)
-from .pipeline import CLUGPConfig, CLUGPResult, clugp_partition  # noqa: F401
+from .pipeline import CLUGPConfig, CLUGPResult  # noqa: F401
 from .stages import (StageCtx, StageSet, PipelineOut,  # noqa: F401
                      run_clugp_body, restream_loop,
-                     HOST_STAGES, JAX_STAGES)
+                     StreamState, stream_state, incremental_assign,
+                     restream_assign, HOST_STAGES, JAX_STAGES)
 from .partitioner import (BACKENDS, partition,  # noqa: F401
-                          clugp_partition_parallel, partition_sweep,
-                          sweep_trace_count)
+                          partition_sweep, sweep_trace_count)
 from . import baselines, metrics, theory  # noqa: F401

@@ -36,7 +36,6 @@ is ``repro.session.GraphSession``.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import lru_cache, partial
 from typing import NamedTuple
 
@@ -87,19 +86,6 @@ def partition(src: np.ndarray, dst: np.ndarray, num_vertices: int,
     if backend == "jit":
         return _run_jit(src, dst, num_vertices, cfg)
     return _run_sharded(src, dst, num_vertices, cfg, nodes, mesh)
-
-
-def clugp_partition_parallel(src: np.ndarray, dst: np.ndarray,
-                             num_vertices: int, cfg: CLUGPConfig,
-                             n_nodes: int = 4) -> CLUGPResult:
-    """Deprecated shim for the §III-C host combine — delegates to the
-    stage body via ``partition(backend="np", nodes=n_nodes)``."""
-    warnings.warn(
-        "clugp_partition_parallel is deprecated; use repro.core.partition"
-        "(..., backend='np', nodes=n) or repro.session.GraphSession",
-        DeprecationWarning, stacklevel=2)
-    return partition(src, dst, num_vertices, cfg, backend="np",
-                     nodes=n_nodes)
 
 
 # ------------------------------------------------------------- np strategy

@@ -1,4 +1,4 @@
-"""CLUGP configuration/result types + the deprecated host entry point.
+"""CLUGP configuration/result types.
 
 The three-pass pipeline body itself lives in ``repro.core.stages``
 (``run_clugp_body`` — one parametric body for every backend) and the
@@ -15,12 +15,13 @@ module keeps the shared types:
   blocked clustering scan's inner per-edge loop (2 = the ROADMAP
   headroom knob; lowering-only, bit-identical results).
 - ``CLUGPResult`` — assignment + per-pass state + stats.
-- ``clugp_partition`` — the seed's host entry point, now a deprecation
-  shim over ``partition(..., backend="np")``.
+
+The seed's host entry points (deprecated for three PRs) are gone — call
+``partition(..., backend="np")`` or drive the chain through
+``repro.session.GraphSession``.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -71,15 +72,3 @@ class CLUGPResult:
     cluster_assign: np.ndarray | None
     game_rounds: int
     stats: dict = field(default_factory=dict)
-
-
-def clugp_partition(src: np.ndarray, dst: np.ndarray, num_vertices: int,
-                    cfg: CLUGPConfig) -> CLUGPResult:
-    """Deprecated shim for the host pipeline — delegates to the stage body
-    via ``partition(..., backend="np")`` (bit-identical results)."""
-    warnings.warn(
-        "clugp_partition is deprecated; use repro.core.partition(..., "
-        "backend='np') or repro.session.GraphSession",
-        DeprecationWarning, stacklevel=2)
-    from .partitioner import partition
-    return partition(src, dst, num_vertices, cfg, backend="np")

@@ -31,6 +31,7 @@ partition → layout → GAS is ``repro.session.GraphSession``.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Protocol
 
@@ -395,3 +396,97 @@ def _jax_prior(src, dst, assign, ctx, cfg):
 JAX_STAGES = StageSet(cluster=_jax_cluster, contract=_jax_contract,
                       game=_jax_game, vertex_part=_jax_vertex_part,
                       transform=_jax_transform, prior=_jax_prior)
+
+
+# -------------------------------------------------------------- serving
+# Incremental window assignment + warm restream — the partitioning-as-a-
+# service entry points (``repro.serve``).  Window-based streaming
+# partitioning (PAPERS.md) absorbs live edge arrivals by assigning a
+# buffered window greedily against the loads the resident partition
+# already carries; when quality drifts past a watermark, a prioritized
+# restream seeded by the current assignment rebuilds it (Awadelkarim &
+# Ugander's warm prior, the same ``restream_loop`` every backend runs).
+
+class StreamState(NamedTuple):
+    """The duck-typed ``(deg, divided)`` pair the host transform stage
+    reads off its cluster state — here derived from a RESIDENT partition
+    instead of a clustering pass: ``deg`` is streamed endpoint degree,
+    ``divided`` marks vertices already replicated across ≥ 2 partitions
+    (cutting them again is free, Alg. 1 lines 17-19)."""
+    deg: np.ndarray
+    divided: np.ndarray
+
+
+def stream_state(src, dst, assign, num_vertices: int,
+                 k: int) -> StreamState:
+    """Derive the transform stage's per-vertex state from an existing
+    edge→partition assignment (no re-clustering)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    assign = np.asarray(assign)
+    ends = np.concatenate([src, dst]).astype(np.int64)
+    deg = np.bincount(ends, minlength=num_vertices).astype(np.int32)
+    cnt = np.bincount(ends * k + np.tile(assign, 2),
+                      minlength=num_vertices * k)
+    divided = (cnt.reshape(num_vertices, k) > 0).sum(axis=1) > 1
+    return StreamState(deg, divided)
+
+
+def incremental_assign(src, dst, new_src, new_dst, assign,
+                       num_vertices: int, cfg, *, state=None,
+                       prior=None) -> np.ndarray:
+    """Assign a NEW edge window against the resident partition: one
+    greedy Alg. 1 pass over the window only, primed with the majority
+    vertex map of the current assignment and seeded with the current
+    per-partition loads; the balance cap covers the grown stream
+    (τ·(E_old+E_new)/k).  Returns the window's edge→partition slice —
+    the resident assignment is untouched.  ``state``/``prior`` can be
+    passed in to amortize across windows."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    assign = np.asarray(assign)
+    if prior is None:
+        prior = majority_vertex_map_np(src, dst, assign, num_vertices,
+                                       cfg.k)
+    if state is None:
+        state = stream_state(src, dst, assign, num_vertices, cfg.k)
+    loads = np.bincount(assign, minlength=cfg.k).astype(np.int64)
+    total = src.shape[0] + np.asarray(new_src).shape[0]
+    lmax = cfg.tau * total / float(cfg.k)
+    return transform_np(np.asarray(new_src), np.asarray(new_dst), prior,
+                        state.deg, state.divided, cfg.k, cfg.tau,
+                        loads=loads, lmax=lmax)
+
+
+def restream_assign(src, dst, assign, num_vertices: int, cfg, *,
+                    passes: int = 1, stages: StageSet = HOST_STAGES
+                    ) -> tuple:
+    """Full prioritized restream seeded by the CURRENT assignment — the
+    drift-repair path: ``passes`` extra Alg. 1 passes over the whole
+    stream, each primed with the previous pass's realized majority (one
+    ``restream_loop`` pass at a time).  MONOTONE: returns the best-RF
+    assignment seen, the input included — a repair pass can never leave
+    the resident partition worse than the drift it was asked to fix.
+    Returns ``(best_assign, rf_trace)`` where ``rf_trace[i]`` is the RF
+    before pass ``i`` (entry 0 = the drifted RF)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    cur = np.asarray(assign)
+    st = stream_state(src, dst, cur, num_vertices, cfg.k)
+    ctx = StageCtx(num_vertices=num_vertices, vmax=0.0)
+    rcfg = dataclasses.replace(cfg, restream=1)
+
+    def rf(a):
+        return metrics.replication_factor(src, dst, a, num_vertices,
+                                          cfg.k)
+
+    best, best_rf = cur, rf(cur)
+    trace = []
+    for _ in range(int(passes)):
+        trace.append(rf(cur))
+        cur, _ = restream_loop(src, dst, cur, [(None, st, ctx)], ctx,
+                               rcfg, stages)
+        r = rf(cur)
+        if r < best_rf:
+            best, best_rf = cur, r
+    return best, tuple(trace)

@@ -22,10 +22,19 @@ import jax.numpy as jnp
 
 def transform_np(src: np.ndarray, dst: np.ndarray,
                  vertex_part: np.ndarray, deg: np.ndarray,
-                 divided: np.ndarray, k: int, tau: float = 1.0) -> np.ndarray:
+                 divided: np.ndarray, k: int, tau: float = 1.0, *,
+                 loads: np.ndarray | None = None,
+                 lmax: float | None = None) -> np.ndarray:
+    """``loads``/``lmax`` seed the greedy pass with pre-existing
+    per-partition edge counts and an external balance cap — the
+    incremental window-assign path (``stages.incremental_assign``)
+    streams NEW edges against the loads the resident partition already
+    carries.  Defaults reproduce the batch Alg. 1 exactly."""
     E = src.shape[0]
-    lmax = tau * E / float(k)
-    loads = np.zeros(k, dtype=np.int64)
+    if lmax is None:
+        lmax = tau * E / float(k)
+    loads = (np.zeros(k, dtype=np.int64) if loads is None
+             else np.asarray(loads, dtype=np.int64).copy())
     assign = np.zeros(E, dtype=np.int32)
     vp = vertex_part
     for i in range(E):

@@ -1,4 +1,4 @@
-"""Fault-tolerant training driver: checkpoint-restart + straggler watch.
+"""Fault tolerance: checkpoint-restart + straggler watch.
 
 ``run`` wraps any ``step_fn(params, opt_state, batch, i)`` in a loop that
 - restores the latest intact checkpoint on entry (elastic restart),
@@ -6,6 +6,12 @@
   thread) plus once at completion,
 - times every step and flags stragglers (step > factor × running median),
 - can inject a failure at a given step for restart testing.
+
+``ServiceFT`` is the same machinery for a long-lived process instead of a
+bounded loop: the graph service (``repro.serve``) snapshots its resident
+edges/assignment through the atomic ``ckpt`` writes and restores them
+shape-blind after a kill, and times its microbatches through the same
+``StragglerWatch`` the trainer uses.
 """
 from __future__ import annotations
 
@@ -44,6 +50,31 @@ def _tree(params, opt_state):
     return {"params": params, "opt": opt_state}
 
 
+class StragglerWatch:
+    """Running-median step timer.  ``observe(dt)`` returns True when the
+    step exceeds ``factor`` × the median of the recorded history — the
+    median is taken BEFORE ``dt`` is recorded, so one slow step can't
+    drown its own baseline.  ``factor=0`` disables; ``warmup`` steps of
+    history are required before anything can be flagged."""
+
+    def __init__(self, factor: float, warmup: int = 2, maxlen: int = 256):
+        self.factor = factor
+        self.warmup = warmup
+        self._hist: deque[float] = deque(maxlen=maxlen)
+        self.flagged = 0
+        self.last_median = 0.0     # baseline the last observe compared to
+
+    def observe(self, dt: float) -> bool:
+        slow = False
+        if self.factor > 0 and len(self._hist) >= self.warmup:
+            self.last_median = statistics.median(self._hist)
+            slow = dt > self.factor * max(self.last_median, 1e-9)
+        self._hist.append(dt)
+        if slow:
+            self.flagged += 1
+        return slow
+
+
 class _Saver:
     """Serialized (optionally async) checkpoint writes."""
 
@@ -52,21 +83,22 @@ class _Saver:
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
-    def _save(self, ckpt_dir: str, step: int, tree):
+    def _save(self, ckpt_dir: str, step: int, tree, extra):
         try:
-            ckpt.save(ckpt_dir, step, tree)
+            ckpt.save(ckpt_dir, step, tree, extra=extra)
         except BaseException as e:  # noqa: BLE001 — re-raised in wait()
             self._error = e
 
-    def save(self, ckpt_dir: str, step: int, tree):
+    def save(self, ckpt_dir: str, step: int, tree, extra: dict | None = None):
         self.wait()
         tree = jax.tree_util.tree_map(jnp.asarray, tree)
         if self.async_mode:
             self._thread = threading.Thread(
-                target=self._save, args=(ckpt_dir, step, tree), daemon=True)
+                target=self._save, args=(ckpt_dir, step, tree, extra),
+                daemon=True)
             self._thread.start()
         else:
-            ckpt.save(ckpt_dir, step, tree)
+            ckpt.save(ckpt_dir, step, tree, extra=extra)
 
     def wait(self):
         if self._thread is not None:
@@ -104,7 +136,7 @@ def run(step_fn: Callable, params, opt_state, data_fn: Callable,
                 log_fn(f"[ft] restored step {step}, resuming at {start}")
     saver = _Saver(cfg.async_checkpoint)
     losses: list[float] = []
-    durations: deque[float] = deque(maxlen=256)   # straggler baseline
+    watch = StragglerWatch(cfg.straggler_factor, cfg.straggler_warmup)
     last_saved = -1
     for i in range(start, total_steps):
         if cfg.fail_at_step is not None and i == cfg.fail_at_step:
@@ -116,14 +148,10 @@ def run(step_fn: Callable, params, opt_state, data_fn: Callable,
                                           jnp.int32(i))
         loss = jax.block_until_ready(loss)
         dt = time.perf_counter() - t0
-        if (cfg.straggler_factor > 0
-                and len(durations) >= cfg.straggler_warmup):
-            median = statistics.median(durations)
-            if dt > cfg.straggler_factor * max(median, 1e-9):
-                state.stragglers += 1
-                if on_straggler is not None:
-                    on_straggler(i, dt, median)
-        durations.append(dt)
+        if watch.observe(dt):
+            state.stragglers += 1
+            if on_straggler is not None:
+                on_straggler(i, dt, watch.last_median)
         losses.append(float(loss))
         state.step = i + 1
         if log_every and i % log_every == 0:
@@ -137,3 +165,42 @@ def run(step_fn: Callable, params, opt_state, data_fn: Callable,
     saver.wait()
     state.step = max(state.step, start)
     return params, opt_state, losses, state
+
+
+class ServiceFT:
+    """Preemption survival for a long-lived service (``repro.serve``).
+
+    The trainer's loop owns its arrays and their shapes; a graph service
+    does not — live ingest grows the resident edge arrays between
+    snapshots, so the template-checked ``ckpt.restore`` would reject its
+    own last checkpoint.  ``ServiceFT`` keeps the atomic-write/torn-read
+    contract but restores SHAPE-BLIND (``ckpt.restore_raw``), carrying a
+    JSON ``extra`` (session config blob, watermarks) alongside the
+    arrays.  It also hosts the microbatch ``StragglerWatch``.
+    """
+
+    def __init__(self, ckpt_dir: str, *, async_checkpoint: bool = False,
+                 straggler_factor: float = 0.0, straggler_warmup: int = 2):
+        self.ckpt_dir = str(ckpt_dir)
+        self._saver = _Saver(async_checkpoint)
+        self.watch = StragglerWatch(straggler_factor, straggler_warmup)
+
+    def snapshot(self, step: int, tree, extra: dict | None = None):
+        """Atomic (optionally async) snapshot of a flat array tree plus a
+        JSON-serializable ``extra`` dict."""
+        self._saver.save(self.ckpt_dir, step, tree, extra=extra)
+
+    def restore_latest(self):
+        """``(flat, extra, step)`` of the newest intact snapshot, or
+        ``(None, None, -1)`` when none exists.  ``flat`` keys are the
+        original tree keys (single-level dict snapshots only)."""
+        steps = ckpt.list_steps(self.ckpt_dir)
+        if not steps:
+            return None, None, -1
+        flat, manifest = ckpt.restore_raw(self.ckpt_dir, steps[-1])
+        flat = {k.strip("[]'\""): v for k, v in flat.items()}
+        return flat, manifest.get("extra", {}), steps[-1]
+
+    def wait(self):
+        """Block until any in-flight async snapshot lands (re-raises)."""
+        self._saver.wait()

@@ -294,7 +294,7 @@ class DenseExchange:
         )(per_prog), 0, 1), state
 
     def bytes_per_iter(self, layout, value_bytes: int = 4) -> int:
-        return layout.comm_bytes_mirror_sync(value_bytes)
+        return layout.comm_bytes("dense", value_bytes=value_bytes)
 
 
 @dataclass(frozen=True)
@@ -399,7 +399,7 @@ class HaloExchange:
         )(masters, recv, dev), state
 
     def bytes_per_iter(self, layout, value_bytes: int = 4) -> int:
-        return layout.comm_bytes_halo(value_bytes)
+        return layout.comm_bytes("halo", value_bytes=value_bytes)
 
 
 def lossy_payload(combine: str, dtype) -> bool:
@@ -651,11 +651,12 @@ class QuantizedHaloExchange:
 
     def bytes_per_iter(self, layout, value_bytes: int = 4,
                        combine: str = "sum", dtype=jnp.float32) -> int:
-        if not lossy_payload(combine, dtype):
-            return layout.comm_bytes_halo(value_bytes)   # exact passthrough
-        # the lossy wire format is fixed by quantize_rows: int8 codes +
-        # one fp32 scale per lane group, whatever the value dtype was
-        return layout.comm_bytes_halo_quantized()
+        # exact payloads pass through at full width; the lossy wire
+        # format is fixed by quantize_rows: int8 codes + one fp32 scale
+        # per lane group, whatever the value dtype was
+        return layout.comm_bytes("quantized",
+                                 lossy=lossy_payload(combine, dtype),
+                                 value_bytes=value_bytes)
 
 
 # ------------------------------------------------- ragged ring exchanges
@@ -814,7 +815,7 @@ class RaggedHaloExchange:
         return jnp.moveaxis(jnp.stack(outs), 0, 1), state
 
     def bytes_per_iter(self, layout, value_bytes: int = 4) -> int:
-        return layout.comm_bytes_ragged(value_bytes)
+        return layout.comm_bytes("ragged", value_bytes=value_bytes)
 
 
 @dataclass(frozen=True)
@@ -1054,9 +1055,10 @@ class RaggedQuantizedHaloExchange:
 
     def bytes_per_iter(self, layout, value_bytes: int = 4,
                        combine: str = "sum", dtype=jnp.float32) -> int:
-        if not lossy_payload(combine, dtype):
-            return layout.comm_bytes_ragged(value_bytes)
-        return layout.comm_bytes_ragged_quantized(self.top_delta)
+        return layout.comm_bytes("ragged_quantized",
+                                 lossy=lossy_payload(combine, dtype),
+                                 top_delta=self.top_delta,
+                                 value_bytes=value_bytes)
 
 
 EXCHANGES = {"dense": DenseExchange, "halo": HaloExchange,
@@ -1064,14 +1066,19 @@ EXCHANGES = {"dense": DenseExchange, "halo": HaloExchange,
              "ragged": RaggedHaloExchange,
              "ragged_quantized": RaggedQuantizedHaloExchange}
 
+# the ONE list of valid wire-format names — session / dryrun /
+# benchmarks / argparse choices all resolve through this instead of
+# re-spelling the five names
+EXCHANGE_NAMES = tuple(EXCHANGES)
+
 # the ragged wire formats need the layout's static per-distance schedule
 RAGGED_EXCHANGES = ("ragged", "ragged_quantized")
 
 
-def get_exchange(name: str, axis: str | None = None, *,
-                 layout=None, top_delta: float | None = None):
-    """Exchange factory: ``name`` ∈ ``EXCHANGES``; ``axis`` is the mesh
-    axis for the shard_map halves (stacked halves ignore it).  The
+def get_exchange(name: str, layout=None, *, axis: str | None = None,
+                 top_delta: float | None = None):
+    """Exchange registry: ``name`` ∈ ``EXCHANGE_NAMES``; ``axis`` is the
+    mesh axis for the shard_map halves (stacked halves ignore it).  The
     ragged wire formats additionally need ``layout`` — their static
     per-distance lane schedule (``layout.halo_schedule()``) is baked
     into the (hashable) instance so it can key jit caches.
@@ -1079,7 +1086,7 @@ def get_exchange(name: str, axis: str | None = None, *,
     if name not in EXCHANGES:
         raise ValueError(
             f"unknown exchange {name!r}; expected one of "
-            f"{sorted(EXCHANGES)}")
+            f"{sorted(EXCHANGE_NAMES)}")
     if name in RAGGED_EXCHANGES:
         if layout is None:
             raise ValueError(

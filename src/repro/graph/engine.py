@@ -473,7 +473,7 @@ def simulate_gas(program: GASProgram, layout: PartitionLayout,
     """Stacked one-device driver for any GAS program (bit-identical math
     to ``shard_map_gas`` — the collectives become transposes/gathers)."""
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, layout=layout)
+    ex = get_exchange(exchange, layout)
     values = _sim_gas(program, dev, iters, ex)
     return _collect_master_values(layout, values)
 
@@ -499,7 +499,7 @@ def shard_map_gas(program: GASProgram, layout: PartitionLayout, mesh: Mesh,
     Requires mesh axis size == layout.k.  ``exchange`` picks the mirror
     wire format (see module docstring).  Returns (V,) master values."""
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, axis, layout=layout)
+    ex = get_exchange(exchange, layout, axis=axis)
     spec = P(axis)
 
     @partial(shard_map, mesh=mesh,
@@ -650,7 +650,7 @@ def simulate_gas_many(programs, layout: PartitionLayout, iters: int = 30,
     dense (V,) master-value array per program, in bundle order."""
     fused = fuse_programs(programs)
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, layout=layout)
+    ex = get_exchange(exchange, layout)
     values = _sim_gas_many(fused, dev, iters, ex)
     return [_collect_master_values(layout, values[:, i])
             for i in range(len(fused.programs))]
@@ -663,7 +663,7 @@ def shard_map_gas_many(programs, layout: PartitionLayout, mesh: Mesh,
     mirror-sync collective per phase for the whole bundle."""
     fused = fuse_programs(programs)
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, axis, layout=layout)
+    ex = get_exchange(exchange, layout, axis=axis)
     spec = P(axis)
 
     @partial(shard_map, mesh=mesh,
@@ -697,7 +697,7 @@ def gas_step_for_dryrun(program, layout: PartitionLayout,
     multi-program iteration (one collective per phase for the bundle) so
     the dry-run can compare fused vs. separate wire bytes."""
     dev = _stack_dev(layout, exchange)
-    ex = get_exchange(exchange, axis, layout=layout)
+    ex = get_exchange(exchange, layout, axis=axis)
     spec = P(axis)
     fused = (None if isinstance(program, GASProgram)
              else fuse_programs(program))

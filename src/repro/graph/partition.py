@@ -49,6 +49,7 @@ replication factors (the common case on web graphs) make Σ_s H_s ≪
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -108,12 +109,75 @@ class PartitionLayout:
         return {f: getattr(self, f) for f in keys}
 
     # -- communication model (bytes per GAS iteration, per §Fig-8 bench) --
-    def comm_bytes_mirror_sync(self, value_bytes: int = 4) -> int:
+    #
+    # ONE public entry point: ``comm_bytes(...)`` routes every wire-format
+    # model by keyword.  The historical per-format methods
+    # (``comm_bytes_mirror_sync`` … ``comm_bytes_dense``) are
+    # ``DeprecationWarning`` shims over it, identity-tested.
+
+    # every name ``comm_bytes`` routes: the five engine wire formats plus
+    # the two bounds ("ideal" = 2·mirrors, "allreduce" = dense psum) and
+    # the legacy table key "dense_gather" (alias of "dense")
+    COMM_MODELS = ("allreduce", "dense", "dense_gather", "halo", "ideal",
+                   "quantized", "ragged", "ragged_quantized")
+
+    def comm_bytes(self, exchange: str | None = None, *, programs: int = 1,
+                   fused: bool = False, lossy: bool = True,
+                   value_bytes: int = 4, top_delta: float = 0.25):
+        """Modelled mirror-sync wire bytes per GAS iteration, keyword-
+        routed:
+
+        - ``comm_bytes()`` — the full per-exchange table (the Fig. 8
+          accounting): ideal / ragged_quantized / quantized / ragged /
+          halo / dense_gather / allreduce.
+        - ``comm_bytes(exchange)`` — one model.  ``exchange`` is any of
+          ``COMM_MODELS``; ``lossy`` is ``halo.lossy_payload(combine,
+          dtype)`` — min/int programs ship the exact full-width payload
+          on the quantized backends.
+        - ``comm_bytes(exchange, programs=N, fused=True)`` — N
+          homogeneous programs as one fused step (single collective per
+          phase; the int4 fused wire when quantized + lossy).
+        """
+        if exchange is None:
+            if fused or programs != 1:
+                raise ValueError(
+                    "comm_bytes(programs=..., fused=...) needs an "
+                    "explicit exchange=")
+            return {"ideal": self._bytes_ideal(value_bytes),
+                    "ragged_quantized": self._bytes_ragged_quantized(
+                        top_delta),
+                    "quantized": self._bytes_halo_quantized(),
+                    "ragged": self._bytes_ragged(value_bytes),
+                    "halo": self._bytes_halo(value_bytes),
+                    "dense_gather": self._bytes_dense_gather(value_bytes),
+                    "allreduce": self._bytes_allreduce(value_bytes)}
+        if exchange not in self.COMM_MODELS:
+            raise ValueError(
+                f"unknown exchange {exchange!r}; expected one of "
+                f"{self.COMM_MODELS}")
+        if fused and exchange == "quantized" and lossy:
+            return self._bytes_fused_quantized(programs)
+        single = {
+            "dense": lambda: self._bytes_dense_gather(value_bytes),
+            "dense_gather": lambda: self._bytes_dense_gather(value_bytes),
+            "halo": lambda: self._bytes_halo(value_bytes),
+            "quantized": lambda: (self._bytes_halo_quantized() if lossy
+                                  else self._bytes_halo(value_bytes)),
+            "ragged": lambda: self._bytes_ragged(value_bytes),
+            "ragged_quantized": lambda: (
+                self._bytes_ragged_quantized(top_delta) if lossy
+                else self._bytes_ragged(value_bytes)),
+            "ideal": lambda: self._bytes_ideal(value_bytes),
+            "allreduce": lambda: self._bytes_allreduce(value_bytes),
+        }[exchange]()
+        return programs * single
+
+    def _bytes_dense_gather(self, value_bytes: int = 4) -> int:
         """Dense backend: all_gather(k, L_max) twice — every device receives
         k·L_max values per phase regardless of mirror count."""
         return 2 * self.k * self.k * self.l_max * value_bytes
 
-    def comm_bytes_halo(self, value_bytes: int = 4) -> int:
+    def _bytes_halo(self, value_bytes: int = 4) -> int:
         """Halo backend: all_to_all(k, H_max) twice — each device puts
         (k−1)·H_max values on the wire per phase (the self block never
         leaves the device)."""
@@ -130,15 +194,14 @@ class PartitionLayout:
         return tuple(int(self.halo_cnt[ar, (ar + s) % k].max(initial=0))
                      for s in range(1, k))
 
-    def comm_bytes_ragged(self, value_bytes: int = 4) -> int:
+    def _bytes_ragged(self, value_bytes: int = 4) -> int:
         """Ragged exact exchange: per phase every device sends Σ_s H_s
         values over k−1 ppermute hops (no self lane, no cross-pair
         padding) — always ≤ the padded halo volume, and equal to the
         ideal 2·mirrors volume when the per-distance maxima are tight."""
         return 2 * self.k * sum(self.halo_schedule()) * value_bytes
 
-    def comm_bytes_ragged_quantized(self, top_delta: float = 0.25,
-                                    value_bytes: int = 4) -> int:
+    def _bytes_ragged_quantized(self, top_delta: float = 0.25) -> int:
         """Ragged top-Δ exchange: per hop the sender ships only the
         T_s = max(1, ⌈top_delta·H_s⌉) largest-|Δ| lanes as (int16 lane
         index + int8 code) pairs plus one fp32 max-abs scale — the rest
@@ -151,11 +214,11 @@ class PartitionLayout:
             total += 3 * t + 4          # 2 B index + 1 B code + scale/H_s
         return 2 * self.k * total
 
-    def comm_bytes_halo_quantized(self, code_bytes: int = 1,
-                                  scale_bytes: int = 4) -> int:
+    def _bytes_halo_quantized(self, code_bytes: int = 1,
+                              scale_bytes: int = 4) -> int:
         """Quantized halo backend (fp32 programs): each of the k·(k−1)
         off-diagonal lane groups ships H_max int8 codes plus one fp32
-        max-abs scale per phase — ~4× below ``comm_bytes_halo`` once
+        max-abs scale per phase — ~4× below the exact halo wire once
         H_max ≫ scale_bytes.  Min/int programs ship the exact halo
         payload instead (see ``repro.dist.halo``)."""
         return 2 * self.k * (self.k - 1) * (
@@ -165,7 +228,7 @@ class PartitionLayout:
     # (destination, program) lane row — 16 B/row (halo._NUM_SCALE_GROUPS)
     FUSED_SCALE_BYTES = 16
 
-    def comm_bytes_fused_quantized(self, n_programs: int) -> int:
+    def _bytes_fused_quantized(self, n_programs: int) -> int:
         """Fused multi-program quantized wire (``repro.dist.halo``
         ``*_multi`` on the quantized backend): N lossy programs share one
         all_to_all per phase whose codes are int4 nibble-packed two per
@@ -179,45 +242,73 @@ class PartitionLayout:
         return 2 * self.k * (self.k - 1) * n_programs * (
             h8 // 2 + self.FUSED_SCALE_BYTES)
 
-    def comm_bytes_exchange(self, exchange: str, *, lossy: bool = True,
-                            value_bytes: int = 4) -> int:
-        """One program's modelled bytes/iter on ``exchange``.  ``lossy``
-        is ``halo.lossy_payload(program.combine, program.dtype)`` —
-        min/int programs ship the exact full-width halo payload on the
-        quantized backend."""
-        if exchange == "dense":
-            return self.comm_bytes_mirror_sync(value_bytes)
-        if exchange == "quantized" and lossy:
-            return self.comm_bytes_halo_quantized()
-        if exchange in ("halo", "quantized"):
-            return self.comm_bytes_halo(value_bytes)
-        if exchange == "ragged_quantized" and lossy:
-            return self.comm_bytes_ragged_quantized()
-        if exchange in ("ragged", "ragged_quantized"):
-            return self.comm_bytes_ragged(value_bytes)
-        raise ValueError(
-            f"unknown exchange {exchange!r}; expected one of "
-            f"{sorted(self.EXCHANGE_TABLES)}")
-
-    def comm_bytes_fused(self, n_programs: int, exchange: str, *,
-                         lossy: bool = True, value_bytes: int = 4) -> int:
-        """Modelled bytes/iter for N homogeneous programs run as one
-        fused step on ``exchange``.  Exact backends ship the concatenated
-        payload (N × the single-program volume); the quantized backend
-        switches to the int4 fused wire format for lossy bundles."""
-        if exchange == "quantized" and lossy:
-            return self.comm_bytes_fused_quantized(n_programs)
-        return n_programs * self.comm_bytes_exchange(
-            exchange, lossy=lossy, value_bytes=value_bytes)
-
-    def comm_bytes_ideal(self, value_bytes: int = 4) -> int:
+    def _bytes_ideal(self, value_bytes: int = 4) -> int:
         """Ragged lower bound: every mirror value moves exactly once per
         phase — 2·mirrors·bytes per iteration."""
         return 2 * self.mirrors_total * value_bytes
 
-    def comm_bytes_dense(self, value_bytes: int = 4) -> int:
+    def _bytes_allreduce(self, value_bytes: int = 4) -> int:
         """dense psum baseline: ring all-reduce over (V,) per device."""
         return 2 * (self.k - 1) * self.num_vertices * value_bytes
+
+    # -- deprecated per-format methods (thin shims over comm_bytes) --
+
+    def _deprecated(self, old: str, new: str):
+        warnings.warn(
+            f"PartitionLayout.{old} is deprecated; use "
+            f"PartitionLayout.{new}", DeprecationWarning, stacklevel=3)
+
+    def comm_bytes_mirror_sync(self, value_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_mirror_sync", "comm_bytes('dense')")
+        return self.comm_bytes("dense", value_bytes=value_bytes)
+
+    def comm_bytes_halo(self, value_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_halo", "comm_bytes('halo')")
+        return self.comm_bytes("halo", value_bytes=value_bytes)
+
+    def comm_bytes_ragged(self, value_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_ragged", "comm_bytes('ragged')")
+        return self.comm_bytes("ragged", value_bytes=value_bytes)
+
+    def comm_bytes_ragged_quantized(self, top_delta: float = 0.25,
+                                    value_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_ragged_quantized",
+                         "comm_bytes('ragged_quantized')")
+        return self.comm_bytes("ragged_quantized", top_delta=top_delta,
+                               value_bytes=value_bytes)
+
+    def comm_bytes_halo_quantized(self, code_bytes: int = 1,
+                                  scale_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_halo_quantized",
+                         "comm_bytes('quantized')")
+        return self._bytes_halo_quantized(code_bytes, scale_bytes)
+
+    def comm_bytes_fused_quantized(self, n_programs: int) -> int:
+        self._deprecated("comm_bytes_fused_quantized",
+                         "comm_bytes('quantized', programs=N, fused=True)")
+        return self._bytes_fused_quantized(n_programs)
+
+    def comm_bytes_exchange(self, exchange: str, *, lossy: bool = True,
+                            value_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_exchange", "comm_bytes(exchange)")
+        return self.comm_bytes(exchange, lossy=lossy,
+                               value_bytes=value_bytes)
+
+    def comm_bytes_fused(self, n_programs: int, exchange: str, *,
+                         lossy: bool = True, value_bytes: int = 4) -> int:
+        self._deprecated(
+            "comm_bytes_fused",
+            "comm_bytes(exchange, programs=N, fused=True)")
+        return self.comm_bytes(exchange, programs=n_programs, fused=True,
+                               lossy=lossy, value_bytes=value_bytes)
+
+    def comm_bytes_ideal(self, value_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_ideal", "comm_bytes('ideal')")
+        return self.comm_bytes("ideal", value_bytes=value_bytes)
+
+    def comm_bytes_dense(self, value_bytes: int = 4) -> int:
+        self._deprecated("comm_bytes_dense", "comm_bytes('allreduce')")
+        return self.comm_bytes("allreduce", value_bytes=value_bytes)
 
 
 def _pad_to(n: int, pad_multiple: int) -> int:

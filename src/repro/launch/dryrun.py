@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
+from repro.dist.halo import EXCHANGE_NAMES
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SHAPES, cell_is_skipped, input_specs
 from repro.dist.sharding import (CP_SERVE_RULES, MULTI_POD_RULES,
@@ -298,8 +299,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     return rec
 
 
-GRAPH_EXCHANGES = ("dense", "halo", "quantized", "ragged",
-                   "ragged_quantized")
+# every engine wire format, straight from the exchange registry —
+# dryrun stopped re-spelling the list
+GRAPH_EXCHANGES = EXCHANGE_NAMES
+
 # the padded all_to_all backends count a self lane in their HLO output
 # shape that never crosses the wire; the ragged ppermute ring has no
 # self hop, so its HLO bytes ARE the wire bytes
@@ -316,7 +319,7 @@ def _graph_comm_model(lay, exchange: str, lossy: bool) -> int:
     ``lossy`` is ``halo.lossy_payload(program.combine, program.dtype)`` —
     min/int programs (CC labels) ship the exact full-width payload on
     the quantized backends, so their model is the exact-wire volume."""
-    return lay.comm_bytes_exchange(exchange, lossy=lossy)
+    return lay.comm_bytes(exchange, lossy=lossy)
 
 
 def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
@@ -335,8 +338,8 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
 
     HLO bytes are per-device; ×k (minus the all_to_all self lane, which
     never crosses the wire) gives the fleet wire volume comparable to
-    ``comm_bytes_mirror_sync`` / ``comm_bytes_halo`` /
-    ``comm_bytes_halo_quantized`` / ``comm_bytes_ideal``.
+    the ``PartitionLayout.comm_bytes(exchange)`` models and the
+    ``comm_bytes("ideal")`` lower bound.
 
     The whole partition → layout → GAS-cell chain is driven through the
     ``GraphSession`` façade — this function only owns the HLO parsing and
@@ -357,7 +360,7 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
             "iters": iters, "num_vertices": g.num_vertices,
             "num_edges": g.num_edges, "l_max": lay.l_max,
             "h_max": lay.h_max, "mirrors": lay.mirrors_total,
-            "comm_bytes_ideal": lay.comm_bytes_ideal()}
+            "comm_bytes_ideal": lay.comm_bytes("ideal")}
 
     def compile_cell(rec, step_arg, exchange):
         t0 = time.time()
@@ -428,8 +431,8 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
     rec = {**base, "program": "+".join(FUSED_BUNDLE),
            "exchange": "quantized", "fused": True,
            "fused_programs": list(FUSED_BUNDLE), "lossy_payload": lossy,
-           "comm_bytes_model": lay.comm_bytes_fused(
-               len(bundle), "quantized", lossy=lossy)}
+           "comm_bytes_model": lay.comm_bytes(
+               "quantized", programs=len(bundle), fused=True, lossy=lossy)}
     rec = compile_cell(rec, list(FUSED_BUNDLE), "quantized")
     recs.append(rec)
     sep = [r for r in recs

@@ -1,0 +1,232 @@
+"""Graph-serving launcher: drive a resident GraphServer end to end.
+
+``python -m repro.launch.serve_graph --scale 13 --k 8 --smoke`` builds a
+web graph, partitions it, and stands up ``repro.serve.GraphServer``
+in-process (no sockets — the driver IS the event loop), then:
+
+1. **queries** — submits a batched mix of score/label/owner/neighbors
+   requests, serves them microbatch by microbatch, and (``--smoke``)
+   asserts every score reply bit-matches a direct
+   ``GraphSession.run``/``run_many`` on the same layout;
+2. **ingestion** — streams random edge arrivals through the window
+   buffer, recording the RF trace as windows flush and the drift
+   watermark triggers prioritized restreams (``--smoke`` asserts at
+   least one restream fired and left RF ≤ the drifted RF);
+3. **preemption** — (``--smoke`` + ``--ckpt-dir``) spawns a child copy
+   of itself (``--child-snapshot``) that builds the same deterministic
+   server, checkpoints through ``dist.ft.ServiceFT``, and SIGKILLs its
+   own process mid-serving; the parent resumes from the snapshot and
+   asserts the identical config blob, assignment, and query replies.
+
+Writes ``results/BENCH_serve.json`` (query latency, RF trace summary)
+for ``benchmarks/trend.py`` to diff across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import CLUGPConfig, web_graph
+from repro.dist.ft import ServiceFT
+from repro.serve import GraphServer
+from repro.session import GraphSession, SessionConfig
+
+SCORE_PROGRAMS = ("pagerank", "degree", "cc", "labelprop")
+
+
+def build_server(args, ft=None) -> GraphServer:
+    """Deterministic graph → session → server from the CLI args — the
+    parent, the ``--child-snapshot`` child, and the resumed server all
+    reconstruct bit-identical state from the same flags."""
+    g = web_graph(scale=args.scale, seed=args.seed)
+    cfg = SessionConfig(clugp=CLUGPConfig(k=args.k), backend=args.backend,
+                        exchange=args.exchange, iters=args.iters)
+    sess = GraphSession(cfg).partition(g.src, g.dst, g.num_vertices)
+    sess.layout()
+    return GraphServer(sess, max_batch=args.max_batch, window=args.window,
+                       rf_watermark=args.watermark,
+                       restream_passes=args.restream_passes, ft=ft)
+
+
+def drive_queries(srv: GraphServer, args, check: bool) -> dict:
+    """Submit a batched query mix, serve it, optionally verify replies
+    against the session run directly on the same layout."""
+    rng = np.random.default_rng(args.seed + 1)
+    n = srv.sess.num_vertices
+    tickets = []
+    for i in range(args.queries):
+        prog = SCORE_PROGRAMS[i % len(SCORE_PROGRAMS)]
+        verts = rng.integers(0, n, 4)
+        tickets.append((srv.submit("score", program=prog, vertices=verts),
+                        "score", prog, verts))
+    for v in rng.integers(0, n, 4):
+        tickets.append((srv.submit("owner", vertices=[v]), "owner", None,
+                        [v]))
+        tickets.append((srv.submit("neighbors", vertices=[v]),
+                        "neighbors", None, [v]))
+    t0 = time.perf_counter()
+    served = srv.serve_pending()
+    dt = time.perf_counter() - t0
+    replies = {t: srv.result(t) for t, *_ in tickets}
+    assert all(r is not None and r.error is None
+               for r in replies.values()), "serve loop dropped a request"
+    if check:
+        # every score reply must bit-match a direct run_many with the
+        # SAME (combine, dtype) wire-cell grouping the server fuses —
+        # the server only batches/caches, it never changes the compute
+        from repro.session import resolve_program
+        cells: dict = {}
+        for p in SCORE_PROGRAMS:
+            prog = resolve_program(p, n)
+            cells.setdefault((prog.combine, np.dtype(prog.dtype).name),
+                             []).append(p)
+        direct = {}
+        for progs in cells.values():
+            outs = srv.sess.run_many(progs, iters=args.iters,
+                                     exchange=args.exchange)
+            direct.update(zip(progs, outs))
+        for t, kind, prog, verts in tickets:
+            if kind == "score":
+                want = direct[prog][np.asarray(verts)]
+                got = replies[t].value
+                assert np.array_equal(got, want), (prog, got, want)
+        print(f"[serve] {args.queries} score replies bit-match direct "
+              f"run_many ({args.exchange} wire)")
+    return {"served": served, "query_ms": dt * 1e3 / max(served, 1),
+            "microbatches": srv.stats["microbatches"]}
+
+
+def drive_ingest(srv: GraphServer, args) -> dict:
+    """Stream random edge arrivals until ``--ingest-windows`` windows
+    have flushed; return the RF drift/repair summary."""
+    rng = np.random.default_rng(args.seed + 2)
+    n = srv.sess.num_vertices
+    target = srv.stats["windows"] + args.ingest_windows
+    while srv.stats["windows"] < target:
+        chunk = max(1, args.window // 4)
+        srv.ingest(rng.integers(0, n, chunk), rng.integers(0, n, chunk))
+    drifted = [v for e, v in srv.rf_trace if e == "window"]
+    repaired = [v for e, v in srv.rf_trace if e == "restream"]
+    return {"rf_base": srv.rf_trace[0][1],
+            "rf_drifted": max(drifted) if drifted else srv.rf_base,
+            "rf_post_restream": repaired[-1] if repaired else None,
+            "restreams": srv.stats["restreams"],
+            "ingested_edges": srv.stats["ingested_edges"]}
+
+
+def child_snapshot(args) -> None:
+    """The preemption victim: build the deterministic server, serve one
+    microbatch, checkpoint, then SIGKILL this very process — nothing
+    after the kill runs, so only the atomic snapshot survives."""
+    ft = ServiceFT(args.ckpt_dir)
+    srv = build_server(args, ft=ft)
+    srv.submit("score", program="pagerank", vertices=[0, 1])
+    srv.step()
+    srv.checkpoint()
+    ft.wait()
+    print("[serve-child] snapshot written, dying", flush=True)
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def kill_resume_check(args) -> None:
+    """Spawn the child, verify it died by SIGKILL, resume from its
+    snapshot, and assert the partition state is identical to the
+    deterministic reference."""
+    cmd = [sys.executable, "-m", "repro.launch.serve_graph",
+           "--child-snapshot", "--ckpt-dir", args.ckpt_dir,
+           "--scale", str(args.scale), "--k", str(args.k),
+           "--exchange", args.exchange, "--backend", args.backend,
+           "--iters", str(args.iters), "--seed", str(args.seed),
+           "--window", str(args.window)]
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    assert proc.returncode == -signal.SIGKILL, (
+        f"child expected to die by SIGKILL, got {proc.returncode}:\n"
+        f"{proc.stdout}{proc.stderr}")
+    ref = build_server(args)
+    srv = GraphServer.resume(ServiceFT(args.ckpt_dir))
+    assert srv.sess.to_json() == ref.sess.to_json(), "config blob drifted"
+    assert np.array_equal(srv.sess.assign, ref.sess.assign), \
+        "resumed assignment differs from the pre-kill partition"
+    ta = srv.submit("score", program="pagerank", vertices=[0, 1])
+    srv.step()
+    tb = ref.submit("score", program="pagerank", vertices=[0, 1])
+    ref.step()
+    assert np.array_equal(srv.result(ta).value, ref.result(tb).value)
+    print("[serve] SIGKILL'd child resumed from snapshot: identical "
+          "config, assignment, and replies")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=13)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--exchange", default="halo")
+    ap.add_argument("--backend", default="np")
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--window", type=int, default=2048)
+    ap.add_argument("--ingest-windows", type=int, default=3)
+    ap.add_argument("--watermark", type=float, default=1.02)
+    ap.add_argument("--restream-passes", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert correctness gates (CI mode)")
+    ap.add_argument("--child-snapshot", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: preemption victim
+    ap.add_argument("--out", default=None,
+                    help="override results/BENCH_serve.json")
+    args = ap.parse_args()
+
+    if args.child_snapshot:
+        child_snapshot(args)
+        return 0                    # unreachable — SIGKILL above
+
+    srv = build_server(args)
+    q = drive_queries(srv, args, check=args.smoke)
+    ing = drive_ingest(srv, args)
+    if args.smoke:
+        assert ing["restreams"] >= 1, (
+            f"RF watermark never tripped: trace {srv.rf_trace}")
+        assert ing["rf_post_restream"] <= ing["rf_drifted"] + 1e-9, ing
+        # the grown graph still serves
+        t = srv.submit("score", program="pagerank", vertices=[0])
+        srv.step()
+        assert srv.result(t).error is None
+        print(f"[serve] drift {ing['rf_drifted']:.3f} repaired to "
+              f"{ing['rf_post_restream']:.3f} over {ing['restreams']} "
+              f"restream(s)")
+    if args.ckpt_dir and args.smoke:
+        kill_resume_check(args)
+
+    row = {"bench": "serve", "scale": args.scale, "k": args.k,
+           "exchange": args.exchange, "window": args.window,
+           "queries": q["served"], "microbatches": q["microbatches"],
+           "query_ms": round(q["query_ms"], 3),
+           "rf_base": round(ing["rf_base"], 4),
+           "rf_drifted": round(ing["rf_drifted"], 4),
+           "rf_post_restream": round(ing["rf_post_restream"], 4)
+           if ing["rf_post_restream"] is not None else None,
+           "restreams": ing["restreams"],
+           "ingested_edges": ing["ingested_edges"]}
+    out = (Path(args.out) if args.out else
+           Path(__file__).resolve().parents[3] / "results"
+           / "BENCH_serve.json")
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps([row], indent=1))
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,13 +27,15 @@ centrality/ppr) or any ``GASProgram`` and simulates on one device
 (``mesh=None``) or shard_maps one partition per device; ``run_many``
 executes N homogeneous programs as one fused loop with a single mirror
 exchange per phase; ``dryrun_step`` hands the compile-only cell (single
-or fused) to ``launch.dryrun --graph``; ``comm_bytes_programs`` /
-``comm_bytes_fused`` are the per-program byte tables the CI gate checks.
+or fused) to ``launch.dryrun --graph``; ``comm_bytes(programs=...,
+exchange=..., fused=...)`` is the one keyword-routed comm accounting
+entry point (per-exchange table, per-program rows, fused bundles).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -41,13 +43,14 @@ import numpy as np
 from .core import metrics
 from .core.partitioner import BACKENDS, partition, partition_sweep
 from .core.pipeline import CLUGPConfig, CLUGPResult
-from .dist.halo import lossy_payload
+from .dist.halo import EXCHANGE_NAMES, lossy_payload
 from .graph import (GASProgram, PROGRAM_NAMES, PartitionLayout,
                     build_layout, fuse_programs, gas_step_for_dryrun,
                     get_program, shard_map_gas, shard_map_gas_many,
                     simulate_gas, simulate_gas_many)
 
-EXCHANGES = ("dense", "halo", "quantized", "ragged", "ragged_quantized")
+# the session validates/enumerates wire formats through the ONE registry
+EXCHANGES = EXCHANGE_NAMES
 PROGRAMS = PROGRAM_NAMES
 
 
@@ -201,6 +204,43 @@ class GraphSession:
         self._require_partition()
         return self.result.stats
 
+    @property
+    def num_vertices(self) -> int:
+        if self._num_vertices is None:
+            raise RuntimeError("GraphSession: no graph yet — call "
+                               "partition(...) or with_partition(...)")
+        return self._num_vertices
+
+    @property
+    def edges(self) -> tuple:
+        """(src, dst) of the adopted edge stream."""
+        if self._src is None:
+            raise RuntimeError("GraphSession: no graph yet — call "
+                               "partition(...) or with_partition(...)")
+        return self._src, self._dst
+
+    # --------------------------------------------------------- snapshots
+
+    def snapshot(self) -> dict:
+        """Host-side array tree of the session's graph + partition — what
+        ``dist.ft.ServiceFT`` checkpoints for a serving process.  Pair it
+        with ``to_json()`` (the config half) and ``num_vertices``;
+        ``from_snapshot`` rebuilds an equivalent session."""
+        self._require_partition()
+        return {"src": np.asarray(self._src).copy(),
+                "dst": np.asarray(self._dst).copy(),
+                "assign": np.asarray(self.result.assign).copy()}
+
+    @classmethod
+    def from_snapshot(cls, config_json: str, tree: dict,
+                      num_vertices: int) -> "GraphSession":
+        """Rebuild a session from ``to_json()`` + ``snapshot()`` output:
+        same config blob, same edges, same edge→partition assignment (no
+        re-partitioning — the snapshot IS the partition)."""
+        sess = cls.from_json(config_json)
+        return sess.with_partition(tree["src"], tree["dst"], num_vertices,
+                                   tree["assign"])
+
     # ----------------------------------------------------------- layout
 
     def layout(self, pad_multiple: int | None = None) -> "GraphSession":
@@ -217,43 +257,64 @@ class GraphSession:
             self.layout()
         return self._layout
 
-    def comm_bytes(self) -> dict:
-        """Modelled mirror-sync wire bytes per GAS iteration, one entry
-        per exchange backend plus the ragged ideal and the dense psum
-        baseline (the Fig. 8 accounting)."""
-        lay = self.partition_layout
-        return {"ideal": lay.comm_bytes_ideal(),
-                "ragged_quantized": lay.comm_bytes_ragged_quantized(),
-                "quantized": lay.comm_bytes_halo_quantized(),
-                "ragged": lay.comm_bytes_ragged(),
-                "halo": lay.comm_bytes_halo(),
-                "dense_gather": lay.comm_bytes_mirror_sync(),
-                "allreduce": lay.comm_bytes_dense()}
+    def comm_bytes(self, programs=None, exchange: str | None = None,
+                   fused: bool = False):
+        """Modelled mirror-sync wire bytes per GAS iteration — the one
+        keyword-routed comm accounting entry point:
 
-    def comm_bytes_programs(self, programs=PROGRAMS) -> dict:
-        """Per-program modelled bytes/iter: {program: {exchange: bytes}}.
-        Int/min programs ship exact on the quantized backend, so their
-        quantized entry equals halo; lossy fp32-sum programs get the int8
-        delta wire (the per-program rows the dry-run gate asserts)."""
+        - ``comm_bytes()`` — the per-exchange table dict (the Fig. 8
+          accounting: every wire format plus the ragged ideal and the
+          dense psum baseline).
+        - ``comm_bytes(exchange="halo")`` — one model's bytes (int).
+        - ``comm_bytes(programs=[...])`` — per-program rows
+          ``{program: {exchange: bytes}}`` with per-program lossy-ness
+          (int/min programs ship exact on the quantized wires — the
+          rows the dry-run gate asserts); narrow to ``{program: bytes}``
+          with ``exchange=``.
+        - ``comm_bytes(programs=[...], fused=True)`` — one fused step's
+          bytes (single collective per phase; int4 fused wire when
+          lossy).  ``exchange`` defaults to the session exchange.
+        """
         lay = self.partition_layout
+        if programs is None:
+            if fused:
+                raise ValueError(
+                    "comm_bytes(fused=True) needs programs=[...]")
+            return lay.comm_bytes(exchange)
+        if fused:
+            bundle = fuse_programs(
+                [resolve_program(p, self._num_vertices) for p in programs])
+            lossy = lossy_payload(bundle.combine, bundle.dtype)
+            return lay.comm_bytes(exchange or self.cfg.exchange,
+                                  programs=len(bundle.programs),
+                                  fused=True, lossy=lossy)
         table = {}
         for p in programs:
             prog = resolve_program(p, self._num_vertices)
             lossy = lossy_payload(prog.combine, prog.dtype)
-            table[prog.name] = {ex: lay.comm_bytes_exchange(ex, lossy=lossy)
-                                for ex in EXCHANGES}
+            if exchange is None:
+                table[prog.name] = {ex: lay.comm_bytes(ex, lossy=lossy)
+                                    for ex in EXCHANGE_NAMES}
+            else:
+                table[prog.name] = lay.comm_bytes(exchange, lossy=lossy)
         return table
 
+    def comm_bytes_programs(self, programs=PROGRAMS) -> dict:
+        """Deprecated — use ``comm_bytes(programs=[...])``."""
+        warnings.warn(
+            "GraphSession.comm_bytes_programs is deprecated; use "
+            "GraphSession.comm_bytes(programs=[...])",
+            DeprecationWarning, stacklevel=2)
+        return self.comm_bytes(programs=programs)
+
     def comm_bytes_fused(self, programs, exchange: str | None = None) -> int:
-        """Modelled bytes/iter for ``programs`` run as one fused step
-        (single collective per phase; int4 fused wire when lossy)."""
-        lay = self.partition_layout
-        fused = fuse_programs(
-            [resolve_program(p, self._num_vertices) for p in programs])
-        lossy = lossy_payload(fused.combine, fused.dtype)
-        return lay.comm_bytes_fused(len(fused.programs),
-                                    exchange or self.cfg.exchange,
-                                    lossy=lossy)
+        """Deprecated — use ``comm_bytes(programs=[...], fused=True)``."""
+        warnings.warn(
+            "GraphSession.comm_bytes_fused is deprecated; use "
+            "GraphSession.comm_bytes(programs=[...], fused=True)",
+            DeprecationWarning, stacklevel=2)
+        return self.comm_bytes(programs=programs, exchange=exchange,
+                               fused=True)
 
     # ------------------------------------------------------------- GAS
 

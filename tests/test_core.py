@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import (CLUGPConfig, ClusterGraph, best_response_rounds,
-                        clugp_partition, clugp_partition_parallel, contract,
+                        contract, partition,
                         default_vmax, global_cost, lambda_max, metrics,
                         potential, streaming_clustering_jax,
                         streaming_clustering_np, theory, transform_jax,
@@ -21,7 +21,7 @@ def small_graph():
 @pytest.fixture(scope="module")
 def clugp_result(small_graph):
     g = small_graph
-    return clugp_partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=8))
+    return partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=8))
 
 
 # ---------------------------------------------------------------- pipeline
@@ -36,8 +36,8 @@ def test_every_edge_assigned_exactly_once(small_graph, clugp_result):
 def test_balance_cap_respected(small_graph):
     g = small_graph
     for tau in (1.0, 1.2, 2.0):
-        res = clugp_partition(g.src, g.dst, g.num_vertices,
-                              CLUGPConfig(k=8, tau=tau))
+        res = partition(g.src, g.dst, g.num_vertices,
+                        CLUGPConfig(k=8, tau=tau))
         sizes = np.bincount(res.assign, minlength=8)
         lmax = tau * g.num_edges / 8
         assert sizes.max() <= int(np.ceil(lmax)) + 1
@@ -53,17 +53,17 @@ def test_rf_beats_hashing(small_graph, clugp_result):
 
 def test_optimized_profile_at_least_as_good(small_graph):
     g = small_graph
-    paper = clugp_partition(g.src, g.dst, g.num_vertices,
-                            CLUGPConfig.paper(8))
-    opt = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(8))
+    paper = partition(g.src, g.dst, g.num_vertices,
+                      CLUGPConfig.paper(8))
+    opt = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(8))
     assert opt.stats["rf"] <= paper.stats["rf"] * 1.05
 
 
 def test_parallel_pipeline_matches_quality(small_graph):
     g = small_graph
-    res = clugp_partition_parallel(g.src, g.dst, g.num_vertices,
-                                   CLUGPConfig(k=8), n_nodes=4)
+    res = partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=8),
+                    nodes=4)
     h = baselines.hashing(g.src, g.dst, g.num_vertices, 8)
     rf_h = metrics.replication_factor(g.src, g.dst, h, g.num_vertices, 8)
     assert res.stats["rf"] < rf_h
@@ -260,7 +260,7 @@ def test_quality_ordering_on_web_graph():
         a = baselines.ALL_BASELINES[name](gr.src, gr.dst, g.num_vertices, k)
         rf[name] = metrics.replication_factor(gr.src, gr.dst, a,
                                               g.num_vertices, k)
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(k))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(k))
     assert rf["hdrf"] < rf["hashing"]
     assert res.stats["rf"] < rf["hashing"]

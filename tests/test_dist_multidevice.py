@@ -9,14 +9,14 @@ pytestmark = pytest.mark.multidevice
 def test_shard_map_pagerank_matches_reference(multidevice):
     multidevice("""
     import numpy as np
-    from repro.core import web_graph, clugp_partition, CLUGPConfig
+    from repro.core import web_graph, partition, CLUGPConfig
     from repro.graph import (build_layout, shard_map_pagerank,
                              reference_pagerank)
     from repro.launch.mesh import make_graph_mesh
 
     g = web_graph(scale=10, edge_factor=6, seed=3)
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(8))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(8))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, 8)
     mesh = make_graph_mesh(8)
     pr = shard_map_pagerank(lay, mesh, iters=30)
@@ -33,14 +33,14 @@ def test_shard_map_pagerank_halo_matches_dense(multidevice):
     (no all-gather) in the compiled step."""
     multidevice("""
     import numpy as np
-    from repro.core import web_graph, clugp_partition, CLUGPConfig
+    from repro.core import web_graph, partition, CLUGPConfig
     from repro.graph import (build_layout, shard_map_pagerank,
                              pagerank_step_for_dryrun, reference_pagerank)
     from repro.launch.mesh import make_graph_mesh
 
     g = web_graph(scale=10, edge_factor=6, seed=3)
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(8))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(8))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, 8)
     mesh = make_graph_mesh(8)
     ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
@@ -65,7 +65,7 @@ def test_shard_map_cc_and_quantized_match_reference(multidevice):
     error-feedback tolerance; its compiled step ships int8 lanes."""
     multidevice("""
     import numpy as np
-    from repro.core import web_graph, clugp_partition, CLUGPConfig
+    from repro.core import web_graph, partition, CLUGPConfig
     from repro.graph import (build_layout, shard_map_cc, shard_map_pagerank,
                              simulate_cc, simulate_pagerank,
                              pagerank_step_for_dryrun, reference_cc,
@@ -73,8 +73,8 @@ def test_shard_map_cc_and_quantized_match_reference(multidevice):
     from repro.launch.mesh import make_graph_mesh
 
     g = web_graph(scale=10, edge_factor=6, seed=3)
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(8))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(8))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, 8)
     mesh = make_graph_mesh(8)
 
@@ -113,7 +113,7 @@ def test_shard_map_ragged_ring_matches_and_ships_fewer_bytes(multidevice):
     < quantized on this skewed-RF layout."""
     multidevice("""
     import numpy as np
-    from repro.core import web_graph, clugp_partition, CLUGPConfig
+    from repro.core import web_graph, partition, CLUGPConfig
     from repro.graph import (build_layout, shard_map_cc, shard_map_pagerank,
                              simulate_cc, simulate_pagerank,
                              pagerank_step_for_dryrun, reference_cc,
@@ -121,8 +121,8 @@ def test_shard_map_ragged_ring_matches_and_ships_fewer_bytes(multidevice):
     from repro.launch.mesh import make_graph_mesh
 
     g = web_graph(scale=10, edge_factor=6, seed=3)
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(8))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(8))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, 8)
     mesh = make_graph_mesh(8)
 
@@ -152,10 +152,9 @@ def test_shard_map_ragged_ring_matches_and_ships_fewer_bytes(multidevice):
     assert not any('all-to-all' in h for h in lhs)
     assert not any('all-gather' in h for h in lhs)
 
-    assert lay.comm_bytes_exchange('ragged') < \\
-        lay.comm_bytes_exchange('halo')
-    assert lay.comm_bytes_exchange('ragged_quantized', lossy=True) < \\
-        lay.comm_bytes_exchange('quantized', lossy=True)
+    assert lay.comm_bytes('ragged') < lay.comm_bytes('halo')
+    assert lay.comm_bytes('ragged_quantized', lossy=True) < \\
+        lay.comm_bytes('quantized', lossy=True)
     print('ragged shard_map ok')
     """)
 
@@ -168,7 +167,7 @@ def test_shard_map_fused_many_matches_simulation(multidevice):
     (not one per program), and iters=0 returns init values unchanged."""
     multidevice("""
     import numpy as np
-    from repro.core import web_graph, clugp_partition, CLUGPConfig
+    from repro.core import web_graph, partition, CLUGPConfig
     from repro.graph import (build_layout, gas_step_for_dryrun, get_program,
                              reference_centrality, reference_pagerank,
                              reference_ppr, shard_map_gas_many,
@@ -176,8 +175,8 @@ def test_shard_map_fused_many_matches_simulation(multidevice):
     from repro.launch.mesh import make_graph_mesh
 
     g = web_graph(scale=10, edge_factor=6, seed=3)
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(8))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(8))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, 8)
     mesh = make_graph_mesh(8)
     names = ('pagerank', 'ppr', 'centrality')

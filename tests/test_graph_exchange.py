@@ -6,7 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import CLUGPConfig, clugp_partition, clugp_partition_parallel
+from repro.core import CLUGPConfig, partition
 from repro.core.graphgen import web_graph
 from repro.graph import (build_layout, build_layout_reference,
                          reference_cc, reference_pagerank, simulate_cc,
@@ -30,11 +30,11 @@ def test_vectorized_layout_matches_reference(seed, k):
             assert a == b, (f.name, a, b)
 
 
-def test_vectorized_layout_matches_reference_on_clugp_partition():
+def test_vectorized_layout_matches_reference_on_partition():
     g = web_graph(scale=9, edge_factor=6, seed=1)
     k = 8
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(k))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(k))
     vec = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
     ref = build_layout_reference(g.src, g.dst, res.assign,
                                  g.num_vertices, k)
@@ -107,14 +107,14 @@ def test_halo_routing_invariants(seed, k):
 def test_comm_model_halo_between_ideal_and_dense():
     g = web_graph(scale=10, edge_factor=8, seed=0)
     k = 8
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(k))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(k))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
     # every mirror has exactly one lane, so the ragged ideal bounds the
     # padded halo volume from below, and the halo volume undercuts the
     # dense k²·L_max slab on any real partition
-    assert lay.comm_bytes_ideal() <= lay.comm_bytes_halo()
-    assert lay.comm_bytes_halo() < lay.comm_bytes_mirror_sync()
+    assert lay.comm_bytes("ideal") <= lay.comm_bytes("halo")
+    assert lay.comm_bytes("halo") < lay.comm_bytes("dense")
 
 
 # ------------------------------------------------- halo vs dense equivalence
@@ -160,13 +160,12 @@ def test_unknown_exchange_rejected():
 def test_parallel_partition_zero_edges_raises_value_error():
     empty = np.zeros(0, dtype=np.int64)
     with pytest.raises(ValueError, match="zero|empty"):
-        clugp_partition_parallel(empty, empty, 10, CLUGPConfig(k=4))
+        partition(empty, empty, 10, CLUGPConfig(k=4))
 
 
 def test_parallel_partition_tiny_stream_still_works():
     # fewer edges than nodes ⇒ some slices empty; must not crash
     src = np.array([0, 1], dtype=np.int64)
     dst = np.array([1, 2], dtype=np.int64)
-    res = clugp_partition_parallel(src, dst, 3, CLUGPConfig(k=2),
-                                   n_nodes=4)
+    res = partition(src, dst, 3, CLUGPConfig(k=2), nodes=4)
     assert res.assign.shape == (2,)

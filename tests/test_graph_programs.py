@@ -176,9 +176,9 @@ def test_fused_comm_model_beats_separate(case):
     from repro.launch.dryrun import FUSED_GATE_RATIO
     _, _, _, lay, _ = case
     for nprog in (2, 3, 4):
-        fused = lay.comm_bytes_fused(nprog, "quantized")
-        sep = nprog * lay.comm_bytes_exchange("quantized", lossy=True)
-        assert fused == lay.comm_bytes_fused_quantized(nprog)
+        fused = lay.comm_bytes("quantized", programs=nprog, fused=True)
+        sep = lay.comm_bytes("quantized", programs=nprog, lossy=True)
+        assert fused == lay._bytes_fused_quantized(nprog)
         # int4 halves the lane payload; the fp16 subgroup scales cost 16
         # bytes/row vs the separate int8 row's 4 — a net win once
         # h_max > 24, which every padded layout satisfies

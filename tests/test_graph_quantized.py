@@ -6,7 +6,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.core import CLUGPConfig, clugp_partition
+from repro.core import CLUGPConfig, partition
 from repro.core.graphgen import web_graph
 from repro.dist.halo import get_exchange
 from repro.graph import (CC_PROGRAM, build_layout, pagerank_program,
@@ -34,11 +34,11 @@ def test_quantized_pagerank_converges_to_reference(seed):
     assert np.abs(pr_q - pr_h).max() < 1e-5
 
 
-def test_quantized_pagerank_on_clugp_partition():
+def test_quantized_pagerank_on_partition():
     g = web_graph(scale=10, edge_factor=8, seed=0)
     k = 8
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(k))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(k))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
     ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
     pr_q = simulate_pagerank(lay, iters=30, exchange="quantized")
@@ -108,13 +108,13 @@ def test_quantized_state_empty_for_min_and_int_programs():
 def test_comm_model_quantized_below_halo_below_dense():
     g = web_graph(scale=10, edge_factor=8, seed=0)
     k = 8
-    res = clugp_partition(g.src, g.dst, g.num_vertices,
-                          CLUGPConfig.optimized(k))
+    res = partition(g.src, g.dst, g.num_vertices,
+                    CLUGPConfig.optimized(k))
     lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
-    assert lay.comm_bytes_halo_quantized() < lay.comm_bytes_halo()
-    assert lay.comm_bytes_halo() < lay.comm_bytes_mirror_sync()
+    assert lay.comm_bytes("quantized") < lay.comm_bytes("halo")
+    assert lay.comm_bytes("halo") < lay.comm_bytes("dense")
     # int8 codes + one fp32 scale per lane group, 2 phases/iter
-    assert lay.comm_bytes_halo_quantized() == \
+    assert lay.comm_bytes("quantized") == \
         2 * k * (k - 1) * (lay.h_max + 4)
 
 

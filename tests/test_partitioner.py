@@ -11,7 +11,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (CLUGPConfig, partition, clugp_partition_parallel,
+from repro.core import (CLUGPConfig, partition,
                         partition_sweep, sweep_trace_count, web_graph)
 
 
@@ -33,7 +33,7 @@ def test_unknown_kernel_raises(graph10):
     g = graph10
     with pytest.raises(ValueError, match="unknown game kernel"):
         partition(g.src, g.dst, g.num_vertices,
-                  CLUGPConfig(k=4, kernel="mxu"), backend="jit")
+            CLUGPConfig(k=4, kernel="mxu"), backend="jit")
 
 
 def test_empty_stream_raises_every_backend():
@@ -99,7 +99,7 @@ def test_jit_balance_cap_respected(graph10):
     g = graph10
     for tau in (1.0, 1.5):
         res = partition(g.src, g.dst, g.num_vertices,
-                        CLUGPConfig(k=8, tau=tau), backend="jit")
+                  CLUGPConfig(k=8, tau=tau), backend="jit")
         sizes = np.bincount(res.assign, minlength=8)
         assert sizes.max() <= int(np.ceil(tau * g.num_edges / 8)) + 1
 
@@ -138,7 +138,7 @@ def test_restream_strictly_improves_rf(graph10):
     base = partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=8),
                      backend="np")
     once = partition(g.src, g.dst, g.num_vertices,
-                     CLUGPConfig(k=8, restream=1), backend="np")
+               CLUGPConfig(k=8, restream=1), backend="np")
     assert once.stats["rf"] < base.stats["rf"]
     trace = once.stats["restream_rf_trace"]
     assert len(trace) == 2 and trace[1] < trace[0]
@@ -149,7 +149,7 @@ def test_restream_improves_jit_too(graph10):
     base = partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=8),
                      backend="jit")
     once = partition(g.src, g.dst, g.num_vertices,
-                     CLUGPConfig(k=8, restream=1), backend="jit")
+               CLUGPConfig(k=8, restream=1), backend="jit")
     assert once.stats["rf"] < base.stats["rf"]
 
 
@@ -212,10 +212,10 @@ def test_np_nodes_combine_honest_stats(graph10):
     assert sum(n["edges"] for n in per_node) == g.num_edges
 
 
-def test_parallel_alias_still_works(graph10):
+def test_np_nodes_kwarg_combines(graph10):
     g = graph10
-    res = clugp_partition_parallel(g.src, g.dst, g.num_vertices,
-                                   CLUGPConfig(k=8), n_nodes=4)
+    res = partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=8),
+                    nodes=4)
     assert res.assign.shape == (g.num_edges,)
     assert res.stats["nodes"] == 4
 
@@ -225,7 +225,7 @@ def test_np_nodes_restream_improves(graph10):
     base = partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=8),
                      backend="np", nodes=4)
     once = partition(g.src, g.dst, g.num_vertices,
-                     CLUGPConfig(k=8, restream=1), backend="np", nodes=4)
+               CLUGPConfig(k=8, restream=1), backend="np", nodes=4)
     assert once.stats["rf"] < base.stats["rf"]
 
 
@@ -260,9 +260,9 @@ g = web_graph(scale=10, edge_factor=6, seed=3)
 k, nodes = 8, 4
 cfg = CLUGPConfig(k=k, restream=1)
 r_np = partition(g.src, g.dst, g.num_vertices, cfg, backend="np",
-                 nodes=nodes)
+           nodes=nodes)
 r_sh = partition(g.src, g.dst, g.num_vertices, cfg, backend="sharded",
-                 nodes=nodes)
+           nodes=nodes)
 assert r_sh.assign.shape == (g.num_edges,)
 assert r_sh.assign.min() >= 0 and r_sh.assign.max() < k
 # balance: every device respects its slice cap, so the global cap holds
@@ -277,9 +277,9 @@ assert r_sh.stats["num_clusters"] == sum(
 # greedy path is bit-identical to the host combine on every device
 cfg_g = CLUGPConfig(k=k, game=False)
 a_np = partition(g.src, g.dst, g.num_vertices, cfg_g, backend="np",
-                 nodes=nodes).assign
+           nodes=nodes).assign
 a_sh = partition(g.src, g.dst, g.num_vertices, cfg_g, backend="sharded",
-                 nodes=nodes).assign
+           nodes=nodes).assign
 np.testing.assert_array_equal(a_np, a_sh)
 print("SHARDED_OK", r_sh.stats["rf"])
 """

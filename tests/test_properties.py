@@ -6,7 +6,7 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (optional dev dep)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (CLUGPConfig, clugp_partition, contract,
+from repro.core import (CLUGPConfig, partition, contract,
                         best_response_rounds, default_vmax, global_cost,
                         lambda_max, metrics, potential,
                         streaming_clustering_np, transform_np)
@@ -33,7 +33,7 @@ def small_graphs(draw):
 @given(small_graphs(), st.integers(2, 8))
 @settings(max_examples=25, deadline=None)
 def test_partition_is_total_and_balanced(g, k):
-    res = clugp_partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=k))
+    res = partition(g.src, g.dst, g.num_vertices, CLUGPConfig(k=k))
     assert res.assign.shape[0] == g.num_edges
     assert 0 <= res.assign.min() and res.assign.max() < k
     sizes = np.bincount(res.assign, minlength=k)

@@ -9,7 +9,8 @@ import pytest
 from repro.core import CLUGPConfig, partition, web_graph
 from repro.graph import build_layout, reference_pagerank, simulate_cc, \
     simulate_pagerank
-from repro.session import GraphSession, SessionConfig, resolve_program
+from repro.session import GraphSession, PROGRAMS, SessionConfig, \
+    resolve_program
 
 
 @pytest.fixture(scope="module")
@@ -108,11 +109,13 @@ def test_comm_bytes_table(graph10):
     sess.partition(g.src, g.dst, g.num_vertices)
     cb = sess.comm_bytes()
     lay = sess.partition_layout
-    assert cb["ideal"] == lay.comm_bytes_ideal()
-    assert cb["quantized"] == lay.comm_bytes_halo_quantized()
-    assert cb["halo"] == lay.comm_bytes_halo()
-    assert cb["dense_gather"] == lay.comm_bytes_mirror_sync()
+    assert cb["ideal"] == lay.comm_bytes("ideal")
+    assert cb["quantized"] == lay.comm_bytes("quantized")
+    assert cb["halo"] == lay.comm_bytes("halo")
+    assert cb["dense_gather"] == lay.comm_bytes("dense")
     assert cb["quantized"] < cb["halo"] < cb["dense_gather"]
+    # single-model routing returns the matching table entry
+    assert sess.comm_bytes(exchange="halo") == cb["halo"]
 
 
 def test_run_many_matches_single_runs(graph10):
@@ -131,18 +134,61 @@ def test_comm_bytes_programs_and_fused(graph10):
     sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
     sess.partition(g.src, g.dst, g.num_vertices)
     lay = sess.partition_layout
-    table = sess.comm_bytes_programs()
+    table = sess.comm_bytes(programs=list(PROGRAMS))
     # float sum programs ship the lossy int8 wire; min/int ship exact
     assert table["pagerank"]["quantized"] == \
-        lay.comm_bytes_exchange("quantized", lossy=True)
+        lay.comm_bytes("quantized", lossy=True)
     assert table["sssp"]["quantized"] == \
-        lay.comm_bytes_exchange("quantized", lossy=False)
+        lay.comm_bytes("quantized", lossy=False)
     for prog in table:
         assert table[prog]["halo"] < table[prog]["dense"]
-    fused = sess.comm_bytes_fused(["pagerank", "ppr", "centrality"],
-                                  exchange="quantized")
-    assert fused == lay.comm_bytes_fused(3, "quantized")
+    # exchange= narrows the per-program rows to plain ints
+    narrow = sess.comm_bytes(programs=["pagerank"], exchange="halo")
+    assert narrow == {"pagerank": lay.comm_bytes("halo")}
+    fused = sess.comm_bytes(programs=["pagerank", "ppr", "centrality"],
+                            exchange="quantized", fused=True)
+    assert fused == lay.comm_bytes("quantized", programs=3, fused=True)
     assert fused < 3 * table["pagerank"]["quantized"]
+
+
+def test_comm_bytes_shims_identical_and_warn(graph10):
+    """The pre-consolidation entry points survive as DeprecationWarning
+    shims that route through the one ``comm_bytes(...)`` — identity on
+    every wire format (the PR 5 shim-test pattern)."""
+    g = graph10
+    sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=4)))
+    sess.partition(g.src, g.dst, g.num_vertices)
+    lay = sess.partition_layout
+    pairs = [
+        (lambda: lay.comm_bytes_mirror_sync(), lay.comm_bytes("dense")),
+        (lambda: lay.comm_bytes_halo(), lay.comm_bytes("halo")),
+        (lambda: lay.comm_bytes_ragged(), lay.comm_bytes("ragged")),
+        (lambda: lay.comm_bytes_ragged_quantized(),
+         lay.comm_bytes("ragged_quantized")),
+        (lambda: lay.comm_bytes_halo_quantized(),
+         lay.comm_bytes("quantized")),
+        (lambda: lay.comm_bytes_fused_quantized(3),
+         lay.comm_bytes("quantized", programs=3, fused=True)),
+        (lambda: lay.comm_bytes_exchange("quantized", lossy=False),
+         lay.comm_bytes("quantized", lossy=False)),
+        (lambda: lay.comm_bytes_fused(2, "ragged"),
+         lay.comm_bytes("ragged", programs=2, fused=True)),
+        (lambda: lay.comm_bytes_ideal(), lay.comm_bytes("ideal")),
+        (lambda: lay.comm_bytes_dense(), lay.comm_bytes("allreduce")),
+        (lambda: sess.comm_bytes_programs(["pagerank"]),
+         sess.comm_bytes(programs=["pagerank"])),
+        (lambda: sess.comm_bytes_fused(["pagerank", "ppr"],
+                                       exchange="quantized"),
+         sess.comm_bytes(programs=["pagerank", "ppr"],
+                         exchange="quantized", fused=True)),
+    ]
+    for shim, expected in pairs:
+        with pytest.warns(DeprecationWarning):
+            assert shim() == expected
+    with pytest.raises(ValueError, match="unknown exchange"):
+        lay.comm_bytes("carrier-pigeon")
+    with pytest.raises(ValueError, match="needs an explicit exchange"):
+        lay.comm_bytes(programs=2, fused=True)
 
 
 def test_run_sweep_lands_on_last_k(graph10):

@@ -1,15 +1,16 @@
-"""The stage protocol (repro.core.stages) and the deprecation shims.
+"""The stage protocol (repro.core.stages) and the retired entry points.
 
 The refactor's contract: `run_clugp_body` is the ONLY place the cluster →
-contract → game → transform sequence exists, the old entry points are
-warning shims over it with bit-identical results, and the `cfg.unroll`
-knob is a pure lowering choice.
+contract → game → transform sequence exists, the deprecated PR 5 entry
+points (`clugp_partition` / `clugp_partition_parallel`) are gone from the
+tree, and the `cfg.unroll` knob is a pure lowering choice.
 """
+from pathlib import Path
+
 import numpy as np
 import pytest
 
-from repro.core import (CLUGPConfig, clugp_partition,
-                        clugp_partition_parallel, partition, web_graph)
+from repro.core import CLUGPConfig, partition, web_graph
 
 
 @pytest.fixture(scope="module")
@@ -17,36 +18,31 @@ def graph10():
     return web_graph(scale=10, edge_factor=6, seed=3)
 
 
-# -------------------------------------------------------- deprecation shims
+# ------------------------------------------------- retired entry points
 
-def test_clugp_partition_shim_identical_to_new_api(graph10):
-    """The old host entry point warns and returns the same CLUGPResult as
-    the stage-body np strategy — assignment, stats, and per-pass state."""
-    g = graph10
-    cfg = CLUGPConfig(k=8, restream=1)
-    with pytest.warns(DeprecationWarning, match="clugp_partition is "
-                                                "deprecated"):
-        old = clugp_partition(g.src, g.dst, g.num_vertices, cfg)
-    new = partition(g.src, g.dst, g.num_vertices, cfg, backend="np")
-    np.testing.assert_array_equal(old.assign, new.assign)
-    np.testing.assert_array_equal(old.clustering.clu, new.clustering.clu)
-    np.testing.assert_array_equal(old.cluster_assign, new.cluster_assign)
-    assert old.game_rounds == new.game_rounds
-    assert old.stats == new.stats
-    assert "restream_rf_trace" in new.stats
+def test_pr5_shims_removed_from_api():
+    """`clugp_partition` / `clugp_partition_parallel` warned for three
+    PRs; they are deleted, not shimmed."""
+    import repro.core as core
+    import repro.core.partitioner as partitioner
+    import repro.core.pipeline as pipeline
+    for mod in (core, partitioner, pipeline):
+        assert not hasattr(mod, "clugp_partition"), mod.__name__
+        assert not hasattr(mod, "clugp_partition_parallel"), mod.__name__
 
 
-def test_clugp_partition_parallel_shim_identical(graph10):
-    g = graph10
-    cfg = CLUGPConfig(k=8, restream=1)
-    with pytest.warns(DeprecationWarning, match="clugp_partition_parallel"):
-        old = clugp_partition_parallel(g.src, g.dst, g.num_vertices, cfg,
-                                       n_nodes=3)
-    new = partition(g.src, g.dst, g.num_vertices, cfg, backend="np",
-                    nodes=3)
-    np.testing.assert_array_equal(old.assign, new.assign)
-    assert old.stats == new.stats
-    assert old.stats["per_node"] == new.stats["per_node"]
+def test_no_in_tree_caller_references_pr5_shims():
+    """Grep gate: no source or test file may mention the removed names
+    (this file's own contract strings are the one exception)."""
+    root = Path(__file__).resolve().parents[1]
+    offenders = []
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        for p in (root / sub).rglob("*.py"):
+            if p.resolve() == Path(__file__).resolve():
+                continue
+            if "clugp_partition" in p.read_text():
+                offenders.append(str(p.relative_to(root)))
+    assert offenders == [], offenders
 
 
 def test_new_api_does_not_warn(graph10):
