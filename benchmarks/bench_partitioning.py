@@ -305,6 +305,29 @@ def fig11_weight_and_balance(scale=12, k=16, seed=0):
     return rows
 
 
+def interior_frontier_rows(scale=10, ks=(4, 8), seed=0) -> list[dict]:
+    """Interior fraction of the built layout per k — the overlap headroom
+    the interleaved GAS body hides behind the ring hops.  Interior
+    vertices (single replica) compute while the k−1 ppermute hops are in
+    flight; RF → 1 drives interior_frac → 1, so this trends partition
+    quality from the engine's point of view, next to RF/balance."""
+    from repro.graph.partition import build_layout
+
+    g = web_graph(scale=scale, edge_factor=8, seed=seed)
+    rows = []
+    for k in ks:
+        res = partition(g.src, g.dst, g.num_vertices,
+                        CLUGPConfig.optimized(k))
+        lay = build_layout(g.src, g.dst, res.assign, g.num_vertices, k)
+        st = lay.interior_frontier_stats()
+        rows.append({"bench": "interior_frontier", "k": k, "scale": scale,
+                     "rf": round(res.stats["rf"], 4),
+                     "interior_frac": round(st["interior_frac"], 4),
+                     "interior_frac_min": round(st["interior_frac_min"],
+                                                4)})
+    return rows
+
+
 def _partition_artifact(args) -> int:
     """Backend sweep → results/BENCH_partition.json (+ optional gate)."""
     import json
@@ -319,6 +342,7 @@ def _partition_artifact(args) -> int:
     # counts are not hidden by a cache fig12_runtime already warmed
     rows += fig12_sweep(scale=scale, ks=ks)
     rows += fig12_cluster_kernels(scale=scale, k=ks[-1])
+    rows += interior_frontier_rows(scale=scale, ks=ks)
     for restream in (0, args.restream) if args.restream else (0,):
         # the unroll cell rides the restream=0 sweep only: it is a
         # lowering knob (bit-identical results), so one µs/edge row per k

@@ -55,11 +55,15 @@ GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us",
 # cluster-scatter / game kernel-identity cells)
 IDENTITY_FIELDS = ("k", "scale", "iters", "seed", "shards", "E", "K",
                    "n_nodes", "exchange", "nodes", "restream", "backend",
-                   "unroll", "program", "fused", "kernel", "window")
+                   "unroll", "program", "fused", "kernel", "window",
+                   "overlap", "warm", "tol")
 # identity fields added after a baseline was recorded get a default, so
 # pre-existing artifacts (rows without the key) still match their
 # successors instead of degenerating into removed-row/new-row noise
-IDENTITY_DEFAULTS = {"unroll": 1, "fused": False, "kernel": "xla"}
+# ("overlap"/"tol" key the dryrun overlap and early-exit cells, "warm"
+# the serve artifact's post-ingest cold/warm pair)
+IDENTITY_DEFAULTS = {"unroll": 1, "fused": False, "kernel": "xla",
+                     "overlap": False, "warm": False, "tol": None}
 
 
 def find_bench(path: str) -> Path | None:

@@ -39,7 +39,14 @@ for exchange in ("halo", "quantized"):
     print(f"pagerank[{exchange}]: max|err|={np.abs(pr-ref).max():.2e} "
           f"(30 iters)")
 
-cc = simulate_cc(lay_clugp, iters=30)
+# pagerank to convergence rather than a fixed sweep count: tol makes 60
+# a cap and the early-exit loop reports the executed count
+pr, it = simulate_pagerank(lay_clugp, iters=60, exchange="ragged",
+                           tol=1e-6, return_iters=True)
+print(f"pagerank[ragged, tol=1e-6]: max|err|={np.abs(pr-ref).max():.2e} "
+      f"({it} of 60 capped iters)")
+
+cc, it = simulate_cc(lay_clugp, iters=30, tol=0, return_iters=True)
 rcc = reference_cc(g.src, g.dst, g.num_vertices)
 print(f"connected components: label match={np.mean(cc == rcc)*100:.1f}% "
-      f"({len(np.unique(rcc))} components)")
+      f"({len(np.unique(rcc))} components, {it} sweeps to fixed point)")

@@ -677,6 +677,32 @@ def _row(table, i, h):
     return jax.lax.dynamic_index_in_dim(table, i, 0, keepdims=False)[:h]
 
 
+def _acc_init(shape, dtype, combine: str):
+    """Hopwise reduce accumulator init: the same fill ``segment_sum`` /
+    ``segment_min`` start their output buffers from, so accumulating
+    hop-by-hop reproduces the deferred segment reduce bit-for-bit
+    (x + 0 is exact; min against the fill is the identity)."""
+    dtype = jnp.dtype(dtype)
+    if combine == "sum":
+        return jnp.zeros(shape, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.full(shape, jnp.iinfo(dtype).max, dtype)
+    return jnp.full(shape, jnp.inf, dtype)
+
+
+def _hop_accumulate(acc, slots, recv, combine: str):
+    """Fold one hop's received lanes into the running (L_max+1,) master
+    accumulator the moment they land.  Valid lanes within a hop target
+    distinct master slots (one source partition → distinct vertices);
+    pads all target the dropped L_max bucket.  Per slot this applies at
+    most one contribution per hop, in hop order — exactly the input
+    order the deferred ``_segment_combine`` over the concatenated hops
+    reduces in, so the two forms agree bitwise."""
+    if combine == "sum":
+        return acc.at[slots].add(recv)
+    return acc.at[slots].min(recv)
+
+
 DEFAULT_TOP_DELTA = 0.25
 
 
@@ -692,6 +718,14 @@ class RaggedHaloExchange:
     all hops, then ONE segment-combine over the concatenated received
     lanes; broadcast scatters each hop straight into the mirror slots
     (each mirror receives from exactly one owner on exactly one hop).
+
+    ``hopwise=True`` on the reduce halves folds each hop's lanes into a
+    running master accumulator the moment they arrive instead of
+    deferring one big segment reduce — bit-identical output
+    (``_hop_accumulate``), but every hop's recv is consumable as soon
+    as its ppermute lands, which is what lets the overlapped GAS body
+    (``engine._gas_body(overlap=True)``) interleave interior compute
+    with the ring without lengthening the collective critical path.
     """
     axis: str | None = None
     schedule: tuple = ()
@@ -710,10 +744,25 @@ class RaggedHaloExchange:
 
     # -- per-device halves (inside shard_map over ``axis``) --
     def reduce_to_masters(self, partial, dev, combine: str = "sum",
-                          state=()):
+                          state=(), *, hopwise: bool = False):
         l_max = partial.shape[0]
         k = self.k
         me = jax.lax.axis_index(self.axis)
+        if hopwise:
+            hops = self._hops()
+            if not hops:
+                return partial, state
+            acc = _acc_init((l_max + 1,), partial.dtype, combine)
+            for s, h in hops:
+                send = _pack(partial,
+                             _row(dev["halo_send"], (me + s) % k, h),
+                             combine)
+                recv = jax.lax.ppermute(
+                    send, self.axis, [(p, (p + s) % k) for p in range(k)])
+                acc = _hop_accumulate(
+                    acc, _row(dev["halo_recv"], (me - s) % k, h), recv,
+                    combine)
+            return _merge(partial, acc[:l_max], combine), state
         recvs, slots = [], []
         for s, h in self._hops():
             send = _pack(partial, _row(dev["halo_send"], (me + s) % k, h),
@@ -748,9 +797,27 @@ class RaggedHaloExchange:
                          scattered[:l_max]), state
 
     # -- stacked halves: ppermute over k virtual devices == jnp.roll --
-    def reduce_stacked(self, partials, dev, combine: str = "sum", state=()):
+    def reduce_stacked(self, partials, dev, combine: str = "sum", state=(),
+                       *, hopwise: bool = False):
         l_max = partials.shape[1]
         ar = jnp.arange(self.k)
+        if hopwise:
+            hops = self._hops()
+            if not hops:
+                return partials, state
+            acc = _acc_init((self.k, l_max + 1), partials.dtype, combine)
+            for s, h in hops:
+                rows = dev["halo_send"][ar, (ar + s) % self.k, :h]
+                send = jax.vmap(
+                    lambda v, r: _pack(v, r, combine))(partials, rows)
+                recv = jnp.roll(send, s, axis=0)
+                wslots = dev["halo_recv"][ar, (ar - s) % self.k, :h]
+                acc = jax.vmap(
+                    lambda a, sl, r: _hop_accumulate(a, sl, r, combine)
+                )(acc, wslots, recv)
+            return jax.vmap(
+                lambda pq, a: _merge(pq, a[:l_max], combine)
+            )(partials, acc), state
         recvs, slots = [], []
         for s, h in self._hops():
             rows = dev["halo_send"][ar, (ar + s) % self.k, :h]
@@ -791,8 +858,8 @@ class RaggedHaloExchange:
         return ()
 
     def reduce_to_masters_multi(self, partials, dev, combine: str = "sum",
-                                state=()):
-        outs = [self.reduce_to_masters(p, dev, combine)[0]
+                                state=(), *, hopwise: bool = False):
+        outs = [self.reduce_to_masters(p, dev, combine, hopwise=hopwise)[0]
                 for p in partials]
         return jnp.stack(outs), state
 
@@ -803,8 +870,8 @@ class RaggedHaloExchange:
         return jnp.stack(outs), state
 
     def reduce_stacked_multi(self, partials, dev, combine: str = "sum",
-                             state=()):
-        outs = [self.reduce_stacked(p, dev, combine)[0]
+                             state=(), *, hopwise: bool = False):
+        outs = [self.reduce_stacked(p, dev, combine, hopwise=hopwise)[0]
                 for p in jnp.moveaxis(partials, 1, 0)]
         return jnp.moveaxis(jnp.stack(outs), 0, 1), state
 
@@ -892,13 +959,14 @@ class RaggedQuantizedHaloExchange:
 
     # -- per-device halves (inside shard_map over ``axis``) --
     def reduce_to_masters(self, partial, dev, combine: str = "sum",
-                          state=()):
+                          state=(), *, hopwise: bool = False):
         if not state:
             return self._exact.reduce_to_masters(partial, dev, combine,
-                                                 state)
+                                                 state, hopwise=hopwise)
         l_max = partial.shape[0]
         k = self.k
         me = jax.lax.axis_index(self.axis)
+        acc = _acc_init((l_max + 1,), partial.dtype, combine)
         new_st, rrefs, slots = [], [], []
         for (s, h), st in zip(self._hops(), state["reduce"]):
             lanes = _pack(partial, _row(dev["halo_send"], (me + s) % k, h),
@@ -909,10 +977,21 @@ class RaggedQuantizedHaloExchange:
                 jax.lax.ppermute(w, self.axis, perm) for w in wire)
             rref = st["rref"] + self._decode(ridx, rcodes, rscales, h)
             new_st.append({**st, "rref": rref})
-            rrefs.append(rref)
-            slots.append(_row(dev["halo_recv"], (me - s) % k, h))
-        if not rrefs:
+            slot = _row(dev["halo_recv"], (me - s) % k, h)
+            if hopwise:
+                # consume this hop's advanced reference immediately —
+                # same per-slot contribution sequence as the deferred
+                # segment reduce (see RaggedHaloExchange docstring)
+                acc = _hop_accumulate(acc, slot, rref.astype(partial.dtype),
+                                      combine)
+            else:
+                rrefs.append(rref)
+                slots.append(slot)
+        if not new_st:
             return partial, state
+        if hopwise:
+            return _merge(partial, acc[:l_max], combine), \
+                {**state, "reduce": tuple(new_st)}
         agg = _segment_combine(jnp.concatenate(rrefs),
                                jnp.concatenate(slots),
                                l_max + 1, combine)[:l_max]
@@ -945,12 +1024,14 @@ class RaggedQuantizedHaloExchange:
         return values, {**state, "bcast": tuple(new_st)}
 
     # -- stacked halves: ppermute over k virtual devices == jnp.roll --
-    def reduce_stacked(self, partials, dev, combine: str = "sum", state=()):
+    def reduce_stacked(self, partials, dev, combine: str = "sum", state=(),
+                       *, hopwise: bool = False):
         if not state:
             return self._exact.reduce_stacked(partials, dev, combine,
-                                              state)
+                                              state, hopwise=hopwise)
         l_max = partials.shape[1]
         ar = jnp.arange(self.k)
+        acc = _acc_init((self.k, l_max + 1), partials.dtype, combine)
         new_st, rrefs, slots = [], [], []
         for (s, h), st in zip(self._hops(), state["reduce"]):
             rows = dev["halo_send"][ar, (ar + s) % self.k, :h]
@@ -960,10 +1041,20 @@ class RaggedQuantizedHaloExchange:
             ridx, rcodes, rscales = (jnp.roll(w, s, axis=0) for w in wire)
             rref = st["rref"] + self._decode(ridx, rcodes, rscales, h)
             new_st.append({**st, "rref": rref})
-            rrefs.append(rref)
-            slots.append(dev["halo_recv"][ar, (ar - s) % self.k, :h])
-        if not rrefs:
+            wslots = dev["halo_recv"][ar, (ar - s) % self.k, :h]
+            if hopwise:
+                acc = jax.vmap(
+                    lambda a, sl, r: _hop_accumulate(a, sl, r, combine)
+                )(acc, wslots, rref.astype(partials.dtype))
+            else:
+                rrefs.append(rref)
+                slots.append(wslots)
+        if not new_st:
             return partials, state
+        if hopwise:
+            return jax.vmap(
+                lambda pq, a: _merge(pq, a[:l_max], combine)
+            )(partials, acc), {**state, "reduce": tuple(new_st)}
         recv_all = jnp.concatenate(rrefs, axis=1)
         slot_all = jnp.concatenate(slots, axis=1)
 
@@ -1006,13 +1097,14 @@ class RaggedQuantizedHaloExchange:
                      for _ in range(n))
 
     def reduce_to_masters_multi(self, partials, dev, combine: str = "sum",
-                                state=()):
+                                state=(), *, hopwise: bool = False):
         if not state:
-            return self._exact.reduce_to_masters_multi(partials, dev,
-                                                       combine, state)
+            return self._exact.reduce_to_masters_multi(
+                partials, dev, combine, state, hopwise=hopwise)
         outs, sts = [], []
         for p, st in zip(partials, state):
-            o, ns = self.reduce_to_masters(p, dev, combine, st)
+            o, ns = self.reduce_to_masters(p, dev, combine, st,
+                                           hopwise=hopwise)
             outs.append(o)
             sts.append(ns)
         return jnp.stack(outs), tuple(sts)
@@ -1030,13 +1122,14 @@ class RaggedQuantizedHaloExchange:
         return jnp.stack(outs), tuple(sts)
 
     def reduce_stacked_multi(self, partials, dev, combine: str = "sum",
-                             state=()):
+                             state=(), *, hopwise: bool = False):
         if not state:
-            return self._exact.reduce_stacked_multi(partials, dev,
-                                                    combine, state)
+            return self._exact.reduce_stacked_multi(
+                partials, dev, combine, state, hopwise=hopwise)
         outs, sts = [], []
         for p, st in zip(jnp.moveaxis(partials, 1, 0), state):
-            o, ns = self.reduce_stacked(p, dev, combine, st)
+            o, ns = self.reduce_stacked(p, dev, combine, st,
+                                        hopwise=hopwise)
             outs.append(o)
             sts.append(ns)
         return jnp.moveaxis(jnp.stack(outs), 0, 1), tuple(sts)

@@ -55,7 +55,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .partition import PartitionLayout
 from ..dist._compat import shard_map
-from ..dist.halo import get_exchange
+from ..dist.halo import RAGGED_EXCHANGES, get_exchange
 
 DAMPING = 0.85
 # CC labels are int32 vertex ids; the min-identity sentinel marks padded /
@@ -397,7 +397,19 @@ def get_program(name: str, num_vertices: int) -> GASProgram:
 
 # ----------------------------------------------------------- shared body
 
-def _gas_body(program: GASProgram, ex, dev, axis: str | None = None):
+def _check_overlap(exchange: str, overlap: bool) -> None:
+    """The overlapped body needs per-hop partial combine + the layout's
+    interior/frontier split — only the ragged ring exchanges provide
+    both (dense/halo sync in one monolithic collective, so there is
+    nothing to overlap against)."""
+    if overlap and exchange not in RAGGED_EXCHANGES:
+        raise ValueError(
+            f"overlap=True needs a ragged ring exchange "
+            f"{RAGGED_EXCHANGES}; got {exchange!r}")
+
+
+def _gas_body(program: GASProgram, ex, dev, axis: str | None = None,
+              overlap: bool = False):
     """One GAS iteration as a ``fori_loop`` body over (value, state).
 
     ``axis=None`` is the stacked form: ``dev`` holds full (k, …) stacks,
@@ -405,7 +417,20 @@ def _gas_body(program: GASProgram, ex, dev, axis: str | None = None):
     ``*_stacked`` halves model the collectives.  With a mesh axis it is
     the per-device form run inside shard_map.  Both forms call the same
     ``program`` callables, so the simulated and production paths cannot
-    drift."""
+    drift.
+
+    ``overlap=True`` (ragged exchanges only) restructures the reduce →
+    apply dependency chain: the ring reduce folds each hop's lanes into
+    the master accumulator as it lands (``hopwise``), and the apply of
+    **interior** vertices (``~dev["frontier"]`` — single-replica, so
+    their aggregate has no mirror contribution) is computed from the
+    local partial alone, with no data dependence on any ppermute.  The
+    scheduler is therefore free to run the interior gather/apply while
+    the ring is still in flight; frontier slots select the exchanged
+    total.  Interior slots satisfy total == partial bit-exactly (the
+    hop accumulator holds the combine identity there), so the overlapped
+    body is bit-identical to the phase-ordered one — same collectives,
+    same values, shorter critical path."""
     stacked = axis is None
 
     def body(_, carry):
@@ -417,22 +442,94 @@ def _gas_body(program: GASProgram, ex, dev, axis: str | None = None):
             aux = None
         if stacked:
             partial_ = jax.vmap(program.local)(value, dev)
-            total, state = ex.reduce_stacked(partial_, dev,
-                                             program.combine, state)
-            new_master = jax.vmap(
-                lambda t, d: program.apply(t, aux, d))(total, dev)
+            if overlap:
+                total, state = ex.reduce_stacked(
+                    partial_, dev, program.combine, state, hopwise=True)
+                app = jax.vmap(lambda t, d: program.apply(t, aux, d))
+                new_master = jnp.where(dev["frontier"], app(total, dev),
+                                       app(partial_, dev))
+            else:
+                total, state = ex.reduce_stacked(partial_, dev,
+                                                 program.combine, state)
+                new_master = jax.vmap(
+                    lambda t, d: program.apply(t, aux, d))(total, dev)
             value, state = ex.broadcast_stacked(new_master, dev,
                                                 program.combine, state)
         else:
             partial_ = program.local(value, dev)
-            total, state = ex.reduce_to_masters(partial_, dev,
-                                                program.combine, state)
-            new_master = program.apply(total, aux, dev)
+            if overlap:
+                total, state = ex.reduce_to_masters(
+                    partial_, dev, program.combine, state, hopwise=True)
+                new_master = jnp.where(
+                    dev["frontier"], program.apply(total, aux, dev),
+                    program.apply(partial_, aux, dev))
+            else:
+                total, state = ex.reduce_to_masters(partial_, dev,
+                                                    program.combine, state)
+                new_master = program.apply(total, aux, dev)
             value, state = ex.broadcast_from_masters(new_master, dev,
                                                      program.combine, state)
         return value, state
 
     return body
+
+
+# --------------------------------------------------- early-exit residual
+
+def _residual(new, old, mask, axis: str | None = None):
+    """Masked max-norm residual between iterates, as f32.  Integer
+    (min/counter) programs difference in int64 first — any real change
+    is ≥ 1 and survives the f32 cast, so ``res > tol`` at tol ≥ 0 means
+    "not yet at the fixed point" exactly; f32 programs use |Δ| directly.
+    With a mesh ``axis`` the result is pmax'd so every device sees the
+    same residual and the while_loop trip count stays lockstep."""
+    if jnp.issubdtype(jnp.asarray(new).dtype, jnp.integer):
+        # |Δ| without widening: values live in [0, iinfo.max] (labels /
+        # distances / counters), so max−min is exact in the native dtype
+        d = jnp.maximum(new, old) - jnp.minimum(new, old)
+    else:
+        d = jnp.abs(new - old)
+    r = jnp.max(jnp.where(mask, d, 0)).astype(jnp.float32)
+    return jax.lax.pmax(r, axis) if axis is not None else r
+
+
+def _converge_loop(body, value, state, iters: int, tol: float, mask,
+                   axis: str | None = None):
+    """``lax.while_loop`` form of the GAS iteration: ``iters`` becomes a
+    cap and the loop exits once the masked master residual drops to
+    ``tol``.  Returns (value, iters_run).  Running the fixed-``iters``
+    path for exactly ``iters_run`` iterations reproduces the same value
+    bit-for-bit — the body is shared, only the trip count differs."""
+    def cond(carry):
+        i, _, _, res = carry
+        return (i < iters) & (res > tol)
+
+    def wbody(carry):
+        i, v, st, _ = carry
+        nv, nst = body(i, (v, st))
+        return i + 1, nv, nst, _residual(nv, v, mask, axis)
+
+    i, value, _, _ = jax.lax.while_loop(
+        cond, wbody,
+        (jnp.int32(0), value, state, jnp.float32(jnp.inf)))
+    return value, i
+
+
+def _warm_tables(layout: PartitionLayout, dtype, init_values):
+    """Host-side dense (V_old,) warm vector → per-slot (k, L_max) value
+    and validity tables.  Vertices the old fixed point knew (gid <
+    len(init_values)) seed from it; everything else keeps ``program.
+    init``.  An empty vector yields an all-False mask — the cold run —
+    so warm and cold share ONE compiled loop (same trace shapes)."""
+    dense = (np.zeros(0) if init_values is None
+             else np.asarray(init_values))
+    n = dense.shape[0]
+    gid = layout.vert_gid
+    known = layout.vert_mask & (gid < n)
+    safe = np.clip(gid, 0, max(n - 1, 0))
+    vals = np.where(known, dense[safe] if n else 0, 0)
+    vals = vals.astype(np.dtype(jnp.dtype(dtype).name))
+    return jnp.asarray(vals), jnp.asarray(known)
 
 
 # ----------------------------------------------------------- simulated driver
@@ -442,20 +539,29 @@ def _stack_dev(layout: PartitionLayout, exchange: str | None = None):
                                   layout.device_arrays(exchange))
 
 
-@partial(jax.jit, static_argnames=("program", "iters", "ex"))
-def _sim_gas(program: GASProgram, dev, iters: int, ex):
+@partial(jax.jit,
+         static_argnames=("program", "iters", "ex", "tol", "overlap"))
+def _sim_gas(program: GASProgram, dev, iters: int, ex,
+             tol: float | None = None, overlap: bool = False, warm=None):
     # ``ex`` is the exchange INSTANCE (frozen dataclass, hashable): the
     # ragged formats carry their per-layout lane schedule in the
     # instance, so the instance — not the exchange name — is the cache key
     value = jax.vmap(program.init)(dev)
+    if warm is not None:
+        wvals, wmask = warm
+        value = jnp.where(wmask, wvals, value)
     # iters == 0 must return init values without even tracing the loop
     # body — a trip-count-0 fori_loop still bakes its collectives into
     # the HLO, which the dry-run byte parser would then count
-    if iters:
-        state = ex.init_state(dev, program.dtype, program.combine)
-        body = _gas_body(program, ex, dev)
+    if not iters:
+        return value if tol is None else (value, jnp.int32(0))
+    state = ex.init_state(dev, program.dtype, program.combine)
+    body = _gas_body(program, ex, dev, overlap=overlap)
+    if tol is None:
         value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
-    return value
+        return value
+    mask = dev["vert_mask"] & dev["is_master"]
+    return _converge_loop(body, value, state, iters, tol, mask)
 
 
 def _collect_master_values(layout: PartitionLayout, stacked) -> np.ndarray:
@@ -469,54 +575,100 @@ def _collect_master_values(layout: PartitionLayout, stacked) -> np.ndarray:
 
 
 def simulate_gas(program: GASProgram, layout: PartitionLayout,
-                 iters: int = 30, exchange: str = "dense") -> np.ndarray:
+                 iters: int = 30, exchange: str = "dense", *,
+                 tol: float | None = None, overlap: bool = False,
+                 init_values=None, return_iters: bool = False):
     """Stacked one-device driver for any GAS program (bit-identical math
-    to ``shard_map_gas`` — the collectives become transposes/gathers)."""
+    to ``shard_map_gas`` — the collectives become transposes/gathers).
+
+    ``tol`` switches the loop to convergence early exit: ``iters``
+    becomes a cap and the run stops once the master-slot residual
+    max-norm drops to ``tol`` (``return_iters=True`` also returns the
+    executed iteration count).  ``overlap`` runs the interleaved
+    interior/frontier body (ragged exchanges only — bit-identical, see
+    ``_gas_body``).  ``init_values`` warm-starts from a dense (V_old,)
+    value vector, e.g. a previously converged fixed point."""
+    _check_overlap(exchange, overlap)
     dev = _stack_dev(layout, exchange)
     ex = get_exchange(exchange, layout)
-    values = _sim_gas(program, dev, iters, ex)
-    return _collect_master_values(layout, values)
+    warm = (None if init_values is None
+            else _warm_tables(layout, program.dtype, init_values))
+    out = _sim_gas(program, dev, iters, ex, tol, overlap, warm)
+    values, iters_run = (out, iters) if tol is None else out
+    dense = _collect_master_values(layout, values)
+    return (dense, int(iters_run)) if return_iters else dense
 
 
 def simulate_pagerank(layout: PartitionLayout, iters: int = 30,
-                      exchange: str = "dense") -> np.ndarray:
+                      exchange: str = "dense", **kw):
     return simulate_gas(pagerank_program(layout.num_vertices), layout,
-                        iters, exchange)
+                        iters, exchange, **kw)
 
 
 def simulate_cc(layout: PartitionLayout, iters: int = 30,
-                exchange: str = "dense") -> np.ndarray:
-    return simulate_gas(CC_PROGRAM, layout, iters,
-                        exchange).astype(np.int64)
+                exchange: str = "dense", **kw):
+    out = simulate_gas(CC_PROGRAM, layout, iters, exchange, **kw)
+    if kw.get("return_iters"):
+        value, iters_run = out
+        return value.astype(np.int64), iters_run
+    return out.astype(np.int64)
 
 
 # ----------------------------------------------------------- shard_map driver
 
 def shard_map_gas(program: GASProgram, layout: PartitionLayout, mesh: Mesh,
                   iters: int = 30, axis: str = "parts",
-                  exchange: str = "dense") -> np.ndarray:
+                  exchange: str = "dense", *, tol: float | None = None,
+                  overlap: bool = False, init_values=None,
+                  return_iters: bool = False):
     """Production path: one partition per device along ``axis``.
     Requires mesh axis size == layout.k.  ``exchange`` picks the mirror
-    wire format (see module docstring).  Returns (V,) master values."""
+    wire format (see module docstring).  Returns (V,) master values.
+    ``tol`` / ``overlap`` / ``init_values`` / ``return_iters`` as in
+    ``simulate_gas`` — the residual is pmax'd across the mesh so every
+    device exits the while_loop on the same iteration."""
+    _check_overlap(exchange, overlap)
     dev = _stack_dev(layout, exchange)
     ex = get_exchange(exchange, layout, axis=axis)
     spec = P(axis)
+    warm = (None if init_values is None
+            else _warm_tables(layout, program.dtype, init_values))
+    args = (dev,) if warm is None else (dev, warm)
+    specs = tuple(jax.tree_util.tree_map(lambda _: spec, a) for a in args)
 
-    @partial(shard_map, mesh=mesh,
-             in_specs=(jax.tree_util.tree_map(lambda _: spec, dev),),
-             out_specs=spec)
-    def run(dev):
+    # the while_loop in the tol path has no shard_map replication rule
+    # on pinned jax — the residual is pmax'd, so every device agrees on
+    # the trip count and the check is safe to skip
+    @partial(shard_map, mesh=mesh, in_specs=specs,
+             out_specs=spec if tol is None else (spec, spec),
+             check_vma=tol is None)
+    def run(dev, *warm_arg):
         dev = jax.tree_util.tree_map(lambda x: x[0], dev)
         value = program.init(dev)
-        if iters:
-            state = ex.init_state(dev, program.dtype, program.combine)
-            body = _gas_body(program, ex, dev, axis)
+        if warm_arg:
+            wvals, wmask = jax.tree_util.tree_map(lambda x: x[0],
+                                                  warm_arg[0])
+            value = jnp.where(wmask, wvals, value)
+        if not iters:
+            return (value[None] if tol is None
+                    else (value[None], jnp.zeros((1,), jnp.int32)))
+        state = ex.init_state(dev, program.dtype, program.combine)
+        body = _gas_body(program, ex, dev, axis, overlap=overlap)
+        if tol is None:
             value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
-        return value[None]
+            return value[None]
+        mask = dev["vert_mask"] & dev["is_master"]
+        value, i = _converge_loop(body, value, state, iters, tol, mask,
+                                  axis)
+        return value[None], i[None]
 
     with mesh:
-        values = run(dev)
-    return _collect_master_values(layout, values)
+        out = run(*args)
+    values, iters_run = (out, iters) if tol is None else out
+    dense = _collect_master_values(layout, values)
+    if return_iters:
+        return dense, int(np.asarray(iters_run).reshape(-1)[0])
+    return dense
 
 
 def shard_map_pagerank(layout: PartitionLayout, mesh: Mesh,
@@ -576,12 +728,16 @@ def fuse_programs(programs) -> FusedGAS:
     return FusedGAS(tuple(programs))
 
 
-def _gas_body_multi(fused: FusedGAS, ex, dev, axis: str | None = None):
+def _gas_body_multi(fused: FusedGAS, ex, dev, axis: str | None = None,
+                    overlap: bool = False):
     """One fused GAS iteration over (values, state) where values carry a
     program axis: (N, L_max) per device, (k, N, L_max) stacked.  The
     per-program math is a python loop over traced stacks (unrolled at
     trace time — N is small), but each mirror-sync phase is a single
-    ``*_multi`` exchange call, i.e. one collective for all N programs."""
+    ``*_multi`` exchange call, i.e. one collective for all N programs.
+    ``overlap`` interleaves interior apply with the ragged ring exactly
+    like ``_gas_body`` (the frontier mask broadcasts over the program
+    axis)."""
     stacked = axis is None
     programs = fused.programs
     n = len(programs)
@@ -609,22 +765,44 @@ def _gas_body_multi(fused: FusedGAS, ex, dev, axis: str | None = None):
             partials = jnp.stack(
                 [jax.vmap(programs[i].local)(value[:, i], dev)
                  for i in range(n)], axis=1)
-            total, state = ex.reduce_stacked_multi(partials, dev,
-                                                   fused.combine, state)
-            new_master = jnp.stack(
-                [jax.vmap(lambda t, d, i=i: programs[i].apply(
-                    t, auxes[i], d))(total[:, i], dev)
-                 for i in range(n)], axis=1)
+
+            def apply_all(tot):
+                return jnp.stack(
+                    [jax.vmap(lambda t, d, i=i: programs[i].apply(
+                        t, auxes[i], d))(tot[:, i], dev)
+                     for i in range(n)], axis=1)
+
+            if overlap:
+                total, state = ex.reduce_stacked_multi(
+                    partials, dev, fused.combine, state, hopwise=True)
+                new_master = jnp.where(dev["frontier"][:, None, :],
+                                       apply_all(total),
+                                       apply_all(partials))
+            else:
+                total, state = ex.reduce_stacked_multi(
+                    partials, dev, fused.combine, state)
+                new_master = apply_all(total)
             value, state = ex.broadcast_stacked_multi(new_master, dev,
                                                       fused.combine, state)
         else:
             partials = jnp.stack([programs[i].local(value[i], dev)
                                   for i in range(n)])
-            total, state = ex.reduce_to_masters_multi(partials, dev,
-                                                      fused.combine, state)
-            new_master = jnp.stack(
-                [programs[i].apply(total[i], auxes[i], dev)
-                 for i in range(n)])
+
+            def apply_all(tot):
+                return jnp.stack(
+                    [programs[i].apply(tot[i], auxes[i], dev)
+                     for i in range(n)])
+
+            if overlap:
+                total, state = ex.reduce_to_masters_multi(
+                    partials, dev, fused.combine, state, hopwise=True)
+                new_master = jnp.where(dev["frontier"][None, :],
+                                       apply_all(total),
+                                       apply_all(partials))
+            else:
+                total, state = ex.reduce_to_masters_multi(
+                    partials, dev, fused.combine, state)
+                new_master = apply_all(total)
             value, state = ex.broadcast_from_masters_multi(
                 new_master, dev, fused.combine, state)
         return value, state
@@ -632,62 +810,117 @@ def _gas_body_multi(fused: FusedGAS, ex, dev, axis: str | None = None):
     return body
 
 
-@partial(jax.jit, static_argnames=("fused", "iters", "ex"))
-def _sim_gas_many(fused: FusedGAS, dev, iters: int, ex):
+@partial(jax.jit,
+         static_argnames=("fused", "iters", "ex", "tol", "overlap"))
+def _sim_gas_many(fused: FusedGAS, dev, iters: int, ex,
+                  tol: float | None = None, overlap: bool = False,
+                  warm=None):
     value = jnp.stack([jax.vmap(p.init)(dev) for p in fused.programs],
                       axis=1)
-    if iters:
-        state = ex.init_state_multi(dev, fused.dtype, fused.combine,
-                                    len(fused.programs))
-        body = _gas_body_multi(fused, ex, dev)
+    if warm is not None:
+        wvals, wmask = warm
+        value = jnp.where(wmask, wvals, value)
+    if not iters:
+        return value if tol is None else (value, jnp.int32(0))
+    state = ex.init_state_multi(dev, fused.dtype, fused.combine,
+                                len(fused.programs))
+    body = _gas_body_multi(fused, ex, dev, overlap=overlap)
+    if tol is None:
         value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
-    return value
+        return value
+    mask = (dev["vert_mask"] & dev["is_master"])[:, None, :]
+    return _converge_loop(body, value, state, iters, tol, mask)
+
+
+def _warm_tables_many(layout: PartitionLayout, fused: FusedGAS,
+                      init_values):
+    """Per-program warm tables stacked along the program axis:
+    ``init_values`` is one dense (V_old,) vector or None per program
+    (None → all-False mask, i.e. that program starts cold)."""
+    pairs = [_warm_tables(layout, fused.dtype, iv) for iv in init_values]
+    return (jnp.stack([v for v, _ in pairs], axis=1),
+            jnp.stack([m for _, m in pairs], axis=1))
 
 
 def simulate_gas_many(programs, layout: PartitionLayout, iters: int = 30,
-                      exchange: str = "dense") -> list[np.ndarray]:
+                      exchange: str = "dense", *,
+                      tol: float | None = None, overlap: bool = False,
+                      init_values=None, return_iters: bool = False):
     """Stacked one-device driver for a fused program bundle; returns one
-    dense (V,) master-value array per program, in bundle order."""
+    dense (V,) master-value array per program, in bundle order.  ``tol``
+    (early exit; residual = max over all programs), ``overlap``, and
+    per-program ``init_values`` as in ``simulate_gas``."""
+    _check_overlap(exchange, overlap)
     fused = fuse_programs(programs)
     dev = _stack_dev(layout, exchange)
     ex = get_exchange(exchange, layout)
-    values = _sim_gas_many(fused, dev, iters, ex)
-    return [_collect_master_values(layout, values[:, i])
-            for i in range(len(fused.programs))]
+    warm = (None if init_values is None
+            else _warm_tables_many(layout, fused, init_values))
+    out = _sim_gas_many(fused, dev, iters, ex, tol, overlap, warm)
+    values, iters_run = (out, iters) if tol is None else out
+    dense = [_collect_master_values(layout, values[:, i])
+             for i in range(len(fused.programs))]
+    return (dense, int(iters_run)) if return_iters else dense
 
 
 def shard_map_gas_many(programs, layout: PartitionLayout, mesh: Mesh,
                        iters: int = 30, axis: str = "parts",
-                       exchange: str = "dense") -> list[np.ndarray]:
+                       exchange: str = "dense", *,
+                       tol: float | None = None, overlap: bool = False,
+                       init_values=None, return_iters: bool = False):
     """Production fused path: N programs per device along ``axis``, one
-    mirror-sync collective per phase for the whole bundle."""
+    mirror-sync collective per phase for the whole bundle.  ``tol`` /
+    ``overlap`` / ``init_values`` / ``return_iters`` as in
+    ``simulate_gas_many``."""
+    _check_overlap(exchange, overlap)
     fused = fuse_programs(programs)
     dev = _stack_dev(layout, exchange)
     ex = get_exchange(exchange, layout, axis=axis)
     spec = P(axis)
+    warm = (None if init_values is None
+            else _warm_tables_many(layout, fused, init_values))
+    args = (dev,) if warm is None else (dev, warm)
+    specs = tuple(jax.tree_util.tree_map(lambda _: spec, a) for a in args)
 
-    @partial(shard_map, mesh=mesh,
-             in_specs=(jax.tree_util.tree_map(lambda _: spec, dev),),
-             out_specs=spec)
-    def run(dev):
+    # see shard_map_gas: the tol while_loop needs the replication check
+    # off on pinned jax; the pmax'd residual keeps trip counts aligned
+    @partial(shard_map, mesh=mesh, in_specs=specs,
+             out_specs=spec if tol is None else (spec, spec),
+             check_vma=tol is None)
+    def run(dev, *warm_arg):
         dev = jax.tree_util.tree_map(lambda x: x[0], dev)
         value = jnp.stack([p.init(dev) for p in fused.programs])
-        if iters:
-            state = ex.init_state_multi(dev, fused.dtype, fused.combine,
-                                        len(fused.programs))
-            body = _gas_body_multi(fused, ex, dev, axis)
+        if warm_arg:
+            wvals, wmask = jax.tree_util.tree_map(lambda x: x[0],
+                                                  warm_arg[0])
+            value = jnp.where(wmask, wvals, value)
+        if not iters:
+            return (value[None] if tol is None
+                    else (value[None], jnp.zeros((1,), jnp.int32)))
+        state = ex.init_state_multi(dev, fused.dtype, fused.combine,
+                                    len(fused.programs))
+        body = _gas_body_multi(fused, ex, dev, axis, overlap=overlap)
+        if tol is None:
             value, _ = jax.lax.fori_loop(0, iters, body, (value, state))
-        return value[None]
+            return value[None]
+        mask = (dev["vert_mask"] & dev["is_master"])[None, :]
+        value, i = _converge_loop(body, value, state, iters, tol, mask,
+                                  axis)
+        return value[None], i[None]
 
     with mesh:
-        values = run(dev)
-    return [_collect_master_values(layout, values[:, i])
-            for i in range(len(fused.programs))]
+        out = run(*args)
+    values, iters_run = (out, iters) if tol is None else out
+    dense = [_collect_master_values(layout, values[:, i])
+             for i in range(len(fused.programs))]
+    if return_iters:
+        return dense, int(np.asarray(iters_run).reshape(-1)[0])
+    return dense
 
 
 def gas_step_for_dryrun(program, layout: PartitionLayout,
                         mesh: Mesh, axis: str = "parts", iters: int = 1,
-                        exchange: str = "dense"):
+                        exchange: str = "dense", overlap: bool = False):
     """Returns (jitted_fn, example_args) whose .lower() the dry-run compiles
     — the graph dry-run parses each backend's collective bytes out of the
     post-SPMD HLO (``launch/dryrun.py --graph``).
@@ -695,7 +928,11 @@ def gas_step_for_dryrun(program, layout: PartitionLayout,
     ``program`` may be a single ``GASProgram``, or a program sequence /
     ``FusedGAS``, in which case the compiled step is the fused
     multi-program iteration (one collective per phase for the bundle) so
-    the dry-run can compare fused vs. separate wire bytes."""
+    the dry-run can compare fused vs. separate wire bytes.  ``overlap``
+    compiles the interleaved interior/frontier body (ragged exchanges
+    only) — the dry-run gates that its wire bytes and collective-permute
+    count match the phase-ordered step exactly."""
+    _check_overlap(exchange, overlap)
     dev = _stack_dev(layout, exchange)
     ex = get_exchange(exchange, layout, axis=axis)
     spec = P(axis)
@@ -711,7 +948,7 @@ def gas_step_for_dryrun(program, layout: PartitionLayout,
             value = program.init(dev)
             if iters:
                 state = ex.init_state(dev, program.dtype, program.combine)
-                body = _gas_body(program, ex, dev, axis)
+                body = _gas_body(program, ex, dev, axis, overlap=overlap)
                 value, _ = jax.lax.fori_loop(0, iters, body,
                                              (value, state))
         else:
@@ -720,7 +957,8 @@ def gas_step_for_dryrun(program, layout: PartitionLayout,
                 state = ex.init_state_multi(dev, fused.dtype,
                                             fused.combine,
                                             len(fused.programs))
-                body = _gas_body_multi(fused, ex, dev, axis)
+                body = _gas_body_multi(fused, ex, dev, axis,
+                                       overlap=overlap)
                 value, _ = jax.lax.fori_loop(0, iters, body,
                                              (value, state))
         return value[None]

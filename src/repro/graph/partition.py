@@ -76,6 +76,9 @@ class PartitionLayout:
     halo_send: np.ndarray    # (k, k, H_max) int32 mirror slots; pad = l_max
     halo_recv: np.ndarray    # (k, k, H_max) int32 master slots; pad = l_max
     halo_cnt: np.ndarray     # (k, k) int32 real lanes per ordered pair
+    frontier: np.ndarray     # (k, L_max) bool: replicated vertex (its
+    #                          master aggregate depends on mirror lanes);
+    #                          interior = vert_mask & ~frontier
     mirrors_total: int       # Σ_v (|P(v)| − 1)
 
     # per-device tables every backend needs, and each wire format's own
@@ -90,9 +93,12 @@ class PartitionLayout:
                        # tables per ppermute distance (lanes are packed at
                        # the front of each pair row); the static schedule
                        # itself travels in the exchange instance, not as a
-                       # device array
-                       "ragged": ("halo_send", "halo_recv"),
-                       "ragged_quantized": ("halo_send", "halo_recv")}
+                       # device array.  ``frontier`` is what lets the
+                       # overlapped body apply interior vertices while the
+                       # ring is still in flight.
+                       "ragged": ("halo_send", "halo_recv", "frontier"),
+                       "ragged_quantized": ("halo_send", "halo_recv",
+                                            "frontier")}
 
     def device_arrays(self, exchange: str | None = None) -> dict:
         """The pytree of arrays each device needs (leading k axis).
@@ -106,7 +112,29 @@ class PartitionLayout:
         keys = self.COMMON_TABLES + (
             tuple(t for ts in self.EXCHANGE_TABLES.values() for t in ts)
             if exchange is None else self.EXCHANGE_TABLES[exchange])
-        return {f: getattr(self, f) for f in keys}
+        return {f: getattr(self, f) for f in dict.fromkeys(keys)}
+
+    def interior_frontier_stats(self) -> dict:
+        """Interior/frontier split of the local vertex tables — the
+        overlap headroom of the partition.  Interior vertices (single
+        replica) can be gathered/applied while the ragged ring is still
+        in flight; frontier vertices (replication > 1) must wait for
+        their mirror lanes.  Returns per-partition interior counts and
+        fractions plus the global interior fraction — another lens on
+        partition quality next to RF (RF → 1 drives interior_frac → 1)."""
+        local = self.vert_mask.sum(axis=1)
+        interior = (self.vert_mask & ~self.frontier).sum(axis=1)
+        with np.errstate(invalid="ignore"):
+            frac = np.where(local > 0, interior / np.maximum(local, 1), 1.0)
+        total_local = int(local.sum())
+        return {
+            "interior_per_part": interior.astype(int).tolist(),
+            "local_per_part": local.astype(int).tolist(),
+            "interior_frac_per_part": [round(float(f), 6) for f in frac],
+            "interior_frac": (float(interior.sum()) / total_local
+                              if total_local else 1.0),
+            "interior_frac_min": float(frac.min(initial=1.0)),
+        }
 
     # -- communication model (bytes per GAS iteration, per §Fig-8 bench) --
     #
@@ -378,16 +406,20 @@ def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
             """Vectorized (partition, gid) → local slot via sorted keys."""
             return slot[np.searchsorted(uniq, parts * num_vertices + verts)]
 
+    replic = np.bincount(uv, minlength=num_vertices)
+
     vert_gid = np.full((k, l_max), num_vertices, dtype=np.int32)
     vert_mask = np.zeros((k, l_max), dtype=bool)
     is_master = np.zeros((k, l_max), dtype=bool)
     out_deg = np.zeros((k, l_max), dtype=np.int32)
     owner = np.zeros((k, l_max), dtype=np.int32)
     own_slot = np.zeros((k, l_max), dtype=np.int32)
+    frontier = np.zeros((k, l_max), dtype=bool)
     row_owner = master_of[uv]
     row_own_slot = slot_of(row_owner, uv)
     row_is_master = row_owner == up
     row_deg = gdeg[uv]
+    row_frontier = replic[uv] > 1
     # rows are grouped by partition, so per-partition contiguous slice
     # copies beat a (k, slot) fancy scatter by ~5×
     for p in range(k):
@@ -402,6 +434,7 @@ def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
         out_deg[p, :n] = row_deg[rows]
         owner[p, :n] = row_owner[rows]
         own_slot[p, :n] = row_own_slot[rows]
+        frontier[p, :n] = row_frontier[rows]
 
     # reduce map: flat all_gather entry (j*L_max + slot) → my slot (if I am
     # the owner of that entry's vertex) else l_max (dropped)
@@ -442,7 +475,6 @@ def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
     halo_cnt = np.bincount(pair, minlength=k * k).reshape(k, k) \
         .astype(np.int32)
 
-    replic = np.bincount(uv, minlength=num_vertices)
     mirrors_total = int(np.maximum(replic - 1, 0).sum())
 
     return PartitionLayout(
@@ -451,7 +483,7 @@ def build_layout(src: np.ndarray, dst: np.ndarray, assign: np.ndarray,
         edge_mask=edge_mask, vert_gid=vert_gid, vert_mask=vert_mask,
         is_master=is_master, owner=owner, own_slot=own_slot,
         red_index=red_index, out_deg=out_deg, halo_send=halo_send,
-        halo_recv=halo_recv, halo_cnt=halo_cnt,
+        halo_recv=halo_recv, halo_cnt=halo_cnt, frontier=frontier,
         mirrors_total=mirrors_total)
 
 
@@ -567,11 +599,16 @@ def build_layout_reference(src: np.ndarray, dst: np.ndarray,
         replic[locals_[p]] += 1
     mirrors_total = int(np.maximum(replic - 1, 0).sum())
 
+    frontier = np.zeros((k, l_max), dtype=bool)
+    for p in range(k):
+        verts = locals_[p]
+        frontier[p, :len(verts)] = replic[verts] > 1
+
     return PartitionLayout(
         k=k, num_vertices=num_vertices, num_edges=E, e_max=e_max,
         l_max=l_max, h_max=h_max, edge_src=edge_src, edge_dst=edge_dst,
         edge_mask=edge_mask, vert_gid=vert_gid, vert_mask=vert_mask,
         is_master=is_master, owner=owner, own_slot=own_slot,
         red_index=red_index, out_deg=out_deg, halo_send=halo_send,
-        halo_recv=halo_recv, halo_cnt=halo_cnt,
+        halo_recv=halo_recv, halo_cnt=halo_cnt, frontier=frontier,
         mirrors_total=mirrors_total)

@@ -104,6 +104,25 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def collective_permute_count(hlo_text: str) -> int:
+    """Number of collective-permute instructions in the post-SPMD HLO.
+
+    Same name-anchoring as ``collective_bytes`` (instruction name left of
+    ``=``, async ``-done`` halves skipped so a start/done pair counts
+    once).  The overlapped ragged body must keep this count identical to
+    the phase-ordered body: overlap re-orders compute around the k−1
+    ring hops, it must never add or drop a hop."""
+    n = 0
+    for line in hlo_text.splitlines():
+        head, sep, _ = line.partition("=")
+        if not sep:
+            continue
+        name = head.strip().removeprefix("ROOT").strip().lstrip("%")
+        if name.startswith("collective-permute") and "-done" not in name:
+            n += 1
+    return n
+
+
 def zero_default(cfg) -> bool:
     from repro.models import param_count
     # ZeRO-shard anything ≥ ~8B params (replicated fp32 wouldn't fit HBM)
@@ -312,6 +331,18 @@ SELF_LANE_EXCHANGES = ("halo", "quantized")
 # of the three separate quantized steps (threshold FUSED_GATE_RATIO)
 FUSED_BUNDLE = ("pagerank", "ppr", "centrality")
 FUSED_GATE_RATIO = 0.6
+# the overlapped ragged body re-orders interior compute around the k−1
+# ppermute ring hops (per-hop partial combine).  CI compiles these cells
+# with overlap=True and requires wire bytes AND collective-permute count
+# identical to the phase-ordered cell: overlap hides hop latency, it
+# must never add, drop, or grow a hop.
+OVERLAP_CELLS = (("pagerank", "ragged"), ("sssp", "ragged"),
+                 ("pagerank", "ragged_quantized"))
+# the early-exit cell EXECUTES pagerank under tol on the bench graph and
+# gates iters_run strictly under the cap, with the tol run's values
+# bit-identical to a fixed-iters run at the reported iters_run
+EARLY_EXIT_TOL = 1e-6
+EARLY_EXIT_CAP = 60
 
 
 def _graph_comm_model(lay, exchange: str, lossy: bool) -> int:
@@ -362,14 +393,16 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
             "h_max": lay.h_max, "mirrors": lay.mirrors_total,
             "comm_bytes_ideal": lay.comm_bytes("ideal")}
 
-    def compile_cell(rec, step_arg, exchange):
+    def compile_cell(rec, step_arg, exchange, overlap=False):
         t0 = time.time()
         try:
             jitted, args = sess.dryrun_step(step_arg, mesh=mesh,
                                             iters=iters,
-                                            exchange=exchange)
+                                            exchange=exchange,
+                                            overlap=overlap)
             compiled = jitted.lower(*args).compile()
-            coll = collective_bytes(compiled.as_text())
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
             total = coll["total"] * k
             # collectives sit once in the fori_loop body, so the HLO
             # count (and the self-lane correction) is per iteration
@@ -388,8 +421,10 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                 "collective_bytes_per_device": coll,
                 "collective_bytes_total": total,
                 "collective_bytes_wire": wire,
+                "collective_permute_count": collective_permute_count(hlo),
             })
-            print(f"[graph × {rec['program']} × {exchange}] OK  "
+            ov = " × overlap" if overlap else ""
+            print(f"[graph × {rec['program']} × {exchange}{ov}] OK  "
                   f"hlo={wire:.3e}B/iter (fleet wire)  "
                   f"model={rec['comm_bytes_model']:.3e}B  "
                   f"ideal={rec['comm_bytes_ideal']:.3e}B")
@@ -406,7 +441,8 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
         lossy = lossy_payload(prog.combine, prog.dtype)
         for exchange in GRAPH_EXCHANGES:
             rec = {**base, "program": pname, "exchange": exchange,
-                   "fused": False, "lossy_payload": lossy,
+                   "fused": False, "overlap": False,
+                   "lossy_payload": lossy,
                    "comm_bytes_model": _graph_comm_model(lay, exchange,
                                                          lossy)}
             recs.append(compile_cell(rec, pname, exchange))
@@ -429,7 +465,7 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
     bundle = [resolve_program(p, g.num_vertices) for p in FUSED_BUNDLE]
     lossy = lossy_payload(bundle[0].combine, bundle[0].dtype)
     rec = {**base, "program": "+".join(FUSED_BUNDLE),
-           "exchange": "quantized", "fused": True,
+           "exchange": "quantized", "fused": True, "overlap": False,
            "fused_programs": list(FUSED_BUNDLE), "lossy_payload": lossy,
            "comm_bytes_model": lay.comm_bytes(
                "quantized", programs=len(bundle), fused=True, lossy=lossy)}
@@ -445,6 +481,48 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
               f"{total_sep:.3e}B → "
               f"{rec['collective_bytes_wire'] / max(total_sep, 1):.3f}× "
               f"(gate < {FUSED_GATE_RATIO})")
+
+    # overlapped ragged cells: interior compute interleaved with the
+    # ring hops — same traffic, same hop count, by construction and gate
+    for pname, exchange in OVERLAP_CELLS:
+        prog = resolve_program(pname, g.num_vertices)
+        lossy = lossy_payload(prog.combine, prog.dtype)
+        rec = {**base, "program": pname, "exchange": exchange,
+               "fused": False, "overlap": True, "lossy_payload": lossy,
+               "comm_bytes_model": _graph_comm_model(lay, exchange,
+                                                     lossy)}
+        recs.append(compile_cell(rec, pname, exchange, overlap=True))
+
+    # early-exit executed cell: pagerank under tol, then a fixed-iters
+    # rerun at the reported iters_run — must be bit-identical
+    import numpy as np
+    try:
+        t0 = time.time()
+        v_tol, iters_run = sess.run(
+            "pagerank", iters=EARLY_EXIT_CAP, exchange="ragged",
+            tol=EARLY_EXIT_TOL, return_iters=True)
+        v_fix = sess.run("pagerank", iters=int(iters_run),
+                         exchange="ragged")
+        rec = {**base, "program": "pagerank", "exchange": "ragged",
+               "fused": False, "overlap": False, "tol": EARLY_EXIT_TOL,
+               "iters_cap": EARLY_EXIT_CAP, "iters_run": int(iters_run),
+               "early_exit_bitmatch":
+                   bool(np.array_equal(np.asarray(v_tol),
+                                       np.asarray(v_fix))),
+               "status": "ok",
+               "compile_s": round(time.time() - t0, 1)}
+        print(f"[graph × pagerank × ragged × tol={EARLY_EXIT_TOL}] OK  "
+              f"iters_run={rec['iters_run']}/{EARLY_EXIT_CAP}  "
+              f"bitmatch={rec['early_exit_bitmatch']}")
+    except Exception as e:  # noqa: BLE001
+        rec = {**base, "program": "pagerank", "exchange": "ragged",
+               "fused": False, "overlap": False, "tol": EARLY_EXIT_TOL,
+               "iters_cap": EARLY_EXIT_CAP,
+               "status": f"FAIL: {type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+        print(f"[graph × pagerank × ragged × tol] FAIL: {e}",
+              file=sys.stderr)
+    recs.append(rec)
     out_dir.mkdir(parents=True, exist_ok=True)
     fname = out_dir / (f"graph__gas__k{k}"
                        f"{('__' + tag) if tag else ''}.json")
@@ -472,13 +550,18 @@ def check_graph_ordering(recs: list[dict]) -> list[str]:
     can exceed the exact payload.  Fused rows (``fused: true``) are
     excluded from the per-program ordering and instead gate the fused
     win: the fused step's wire bytes must be < ``FUSED_GATE_RATIO`` × the
-    sum of its bundle programs' separate quantized steps.  Returns the
-    list of violations (empty == pass)."""
+    sum of its bundle programs' separate quantized steps.  Overlap rows
+    (``overlap: true``) gate the interleaved ragged body: wire bytes and
+    collective-permute count must equal the phase-ordered cell exactly.
+    Early-exit rows (``tol`` set) gate ``iters_run`` strictly under the
+    cap with the tol run bit-identical to a fixed-iters run at
+    ``iters_run``.  Returns the list of violations (empty == pass)."""
     msgs = [f"{r.get('program', '?')}/{r.get('exchange', '?')}: "
             f"{r.get('status')}"
             for r in recs if r.get("status") != "ok"]
     by = {(r["program"], r["exchange"]): r
-          for r in recs if r.get("status") == "ok" and not r.get("fused")}
+          for r in recs if r.get("status") == "ok" and not r.get("fused")
+          and not r.get("overlap") and r.get("tol") is None}
     for prog in sorted({p for p, _ in by}):
         cells = {e: by.get((prog, e)) for e in GRAPH_EXCHANGES}
         if any(c is None for c in cells.values()):
@@ -518,6 +601,45 @@ def check_graph_ordering(recs: list[dict]) -> list[str]:
             msgs.append(
                 f"{r['program']}: fused bytes/iter {fused_wire} ≥ "
                 f"{FUSED_GATE_RATIO} × Σ separate ({total_sep})")
+    # overlap gate: the interleaved body is a pure re-ordering — wire
+    # bytes and collective-permute count must equal the phase-ordered
+    # cell exactly
+    for r in recs:
+        if not r.get("overlap") or r.get("status") != "ok":
+            continue
+        ref = by.get((r["program"], r["exchange"]))
+        if ref is None:
+            msgs.append(f"{r['program']}/{r['exchange']}: overlap gate "
+                        f"needs the phase-ordered cell")
+            continue
+        if r["collective_bytes_wire"] != ref["collective_bytes_wire"]:
+            msgs.append(
+                f"{r['program']}/{r['exchange']}: overlapped bytes/iter "
+                f"{r['collective_bytes_wire']} != phase-ordered "
+                f"{ref['collective_bytes_wire']}")
+        if (r.get("collective_permute_count")
+                != ref.get("collective_permute_count")):
+            msgs.append(
+                f"{r['program']}/{r['exchange']}: overlapped "
+                f"collective-permute count "
+                f"{r.get('collective_permute_count')} != phase-ordered "
+                f"{ref.get('collective_permute_count')}")
+    # early-exit gate: tol must stop strictly before the cap, and the
+    # tol run must be bit-identical to a fixed run at iters_run
+    for r in recs:
+        if (r.get("tol") is None or r.get("fused")
+                or r.get("status") != "ok"):
+            continue
+        if not r["iters_run"] < r["iters_cap"]:
+            msgs.append(
+                f"{r['program']}/{r['exchange']}: tol={r['tol']} ran "
+                f"iters_run={r['iters_run']} — not strictly under the "
+                f"cap {r['iters_cap']}")
+        if not r.get("early_exit_bitmatch"):
+            msgs.append(
+                f"{r['program']}/{r['exchange']}: tol run not "
+                f"bit-identical to fixed-iters run at "
+                f"iters_run={r.get('iters_run')}")
     return msgs
 
 
@@ -622,9 +744,12 @@ def main():
                          "order quantized < halo < dense per program "
                          "(exact int payloads allow quantized == halo), "
                          "ragged ≤ halo and ragged_quantized < quantized "
-                         "(== ragged for exact payloads), AND the fused "
+                         "(== ragged for exact payloads), the fused "
                          "bundle ships < 0.6× the bytes of its separate "
-                         "quantized steps")
+                         "quantized steps, the overlapped ragged cells "
+                         "match their phase-ordered twins in bytes and "
+                         "collective-permute count, and the tol cell "
+                         "early-exits under its cap bit-identically")
     ap.add_argument("--compress-grads", action="store_true",
                     help="train cells: int8 gradient quantization; also "
                          "compiles the uncompressed step and prints the "
@@ -651,8 +776,11 @@ def main():
             if not msgs:
                 print("collective-bytes gate: quantized < halo < dense, "
                       "ragged ≤ halo and ragged_quantized < quantized "
-                      "hold for every program, and the fused bundle "
-                      f"ships < {FUSED_GATE_RATIO}× its separate steps")
+                      "hold for every program, the fused bundle "
+                      f"ships < {FUSED_GATE_RATIO}× its separate steps, "
+                      "overlap cells match phase-ordered bytes and "
+                      "collective-permute count, and tol early-exits "
+                      "under the cap bit-identically")
             sys.exit(1 if msgs else 0)
         sys.exit(1 if n_fail else 0)
     archs = ARCHS if (args.all or not args.arch) else [args.arch]

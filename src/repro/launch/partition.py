@@ -154,6 +154,11 @@ def main():
     if args.pagerank:
         from repro.graph import reference_pagerank
         sess.layout()
+        st = sess.partition_layout.interior_frontier_stats()
+        print(f"interior/frontier: frac={st['interior_frac']:.3f} "
+              f"min={st['interior_frac_min']:.3f} "
+              f"(overlap headroom — interior rows compute during the "
+              f"ring hops)")
         t0 = time.time()
         pr = sess.run("pagerank", iters=30)
         dt = time.time() - t0

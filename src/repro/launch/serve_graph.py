@@ -12,6 +12,11 @@ in-process (no sockets — the driver IS the event loop), then:
    buffer, recording the RF trace as windows flush and the drift
    watermark triggers prioritized restreams (``--smoke`` asserts at
    least one restream fired and left RF ≤ the drifted RF);
+   With ``--tol`` the server runs the convergence early-exit loop
+   (``--iters`` becomes a cap) and, after ingestion, replays the same
+   query mix **cold** (program inits) and **warm** (pre-swap fixed
+   points as seeds) — ``--smoke`` gates warm ``iters_run`` and
+   ``query_ms`` strictly below cold;
 3. **preemption** — (``--smoke`` + ``--ckpt-dir``) spawns a child copy
    of itself (``--child-snapshot``) that builds the same deterministic
    server, checkpoints through ``dist.ft.ServiceFT``, and SIGKILLs its
@@ -53,7 +58,8 @@ def build_server(args, ft=None) -> GraphServer:
     sess.layout()
     return GraphServer(sess, max_batch=args.max_batch, window=args.window,
                        rf_watermark=args.watermark,
-                       restream_passes=args.restream_passes, ft=ft)
+                       restream_passes=args.restream_passes,
+                       tol=args.tol, ft=ft)
 
 
 def drive_queries(srv: GraphServer, args, check: bool) -> dict:
@@ -90,8 +96,17 @@ def drive_queries(srv: GraphServer, args, check: bool) -> dict:
                              []).append(p)
         direct = {}
         for progs in cells.values():
-            outs = srv.sess.run_many(progs, iters=args.iters,
-                                     exchange=args.exchange)
+            if args.tol is None:
+                outs = srv.sess.run_many(progs, iters=args.iters,
+                                         exchange=args.exchange)
+            else:
+                # same tol semantics as the server's step: cold seeds,
+                # iters as a cap — bit-match still holds exactly
+                outs, _ = srv.sess.run_many(
+                    progs, iters=args.iters, exchange=args.exchange,
+                    tol=args.tol,
+                    init_values=[np.zeros(0)] * len(progs),
+                    return_iters=True)
             direct.update(zip(progs, outs))
         for t, kind, prog, verts in tickets:
             if kind == "score":
@@ -122,6 +137,84 @@ def drive_ingest(srv: GraphServer, args) -> dict:
             "ingested_edges": srv.stats["ingested_edges"]}
 
 
+def drive_warm_cold(srv: GraphServer, args, check: bool) -> list[dict]:
+    """Post-ingest warm-vs-cold comparison (``--tol`` mode only).
+
+    The restream swap flushed the value caches and seeded ``_warm`` with
+    the pre-swap fixed points.  This runs the SAME query mix twice over
+    the grown graph: once **cold** (warm seeds stashed away — the
+    all-False warm mask takes every program back to its init) and once
+    **warm** (seeds restored).  Both rounds reuse the while_loop compiled
+    during the pre-ingest queries, so ``query_ms`` compares fairly; the
+    smoke gate requires the warm round to run strictly fewer iterations
+    AND strictly less wall-clock per query than cold."""
+    n = srv.sess.num_vertices
+
+    def round_(warm: bool) -> tuple[dict, dict]:
+        rng = np.random.default_rng(args.seed + 3)   # same mix both ways
+        srv.last_iters_run.clear()
+        tickets = []
+        for i in range(args.queries):
+            prog = SCORE_PROGRAMS[i % len(SCORE_PROGRAMS)]
+            verts = rng.integers(0, n, 4)
+            tickets.append(
+                (srv.submit("score", program=prog, vertices=verts),
+                 prog, verts))
+        t0 = time.perf_counter()
+        served = srv.serve_pending()
+        dt = time.perf_counter() - t0
+        replies = {t: srv.result(t) for t, *_ in tickets}
+        assert all(r is not None and r.error is None
+                   for r in replies.values()), "serve loop dropped a request"
+        row = {"warm": warm,
+               "query_ms": round(dt * 1e3 / max(served, 1), 3),
+               "iters_run": max(srv.last_iters_run.values())}
+        return row, [(replies[t], p, v) for t, p, v in tickets]
+
+    stash = dict(srv._warm)
+    srv._warm.clear()
+    srv._values.clear()
+    cold, _ = round_(warm=False)
+    srv._warm.update(stash)
+    srv._values.clear()          # force the warm round to recompute
+    warm, warm_replies = round_(warm=True)
+    print(f"[serve] post-ingest cold: {cold['iters_run']} iters "
+          f"{cold['query_ms']}ms/q — warm: {warm['iters_run']} iters "
+          f"{warm['query_ms']}ms/q")
+    if check:
+        # warm replies must still bit-match a direct run_many with the
+        # same tol and the same warm seeds — warm start changes where
+        # the loop starts, never what the server computes
+        from repro.session import resolve_program
+        cells: dict = {}
+        for p in SCORE_PROGRAMS:
+            prog = resolve_program(p, n)
+            cells.setdefault((prog.combine, np.dtype(prog.dtype).name),
+                             []).append(p)
+        direct = {}
+        for progs in cells.values():
+            seeds = [stash.get((p, args.exchange), np.zeros(0))
+                     for p in progs]
+            outs, _ = srv.sess.run_many(
+                progs, iters=args.iters, exchange=args.exchange,
+                tol=args.tol, init_values=seeds, return_iters=True)
+            direct.update(zip(progs, outs))
+        for reply, prog, verts in warm_replies:
+            want = direct[prog][np.asarray(verts)]
+            assert np.array_equal(reply.value, want), (prog, reply.value,
+                                                       want)
+        assert warm["iters_run"] < cold["iters_run"], (
+            f"warm start ran {warm['iters_run']} iters, cold "
+            f"{cold['iters_run']} — no repair win")
+        assert warm["query_ms"] < cold["query_ms"], (
+            f"warm query_ms {warm['query_ms']} not below cold "
+            f"{cold['query_ms']}")
+        print(f"[serve] warm replies bit-match direct run_many; "
+              f"warm {warm['iters_run']} < cold {cold['iters_run']} "
+              f"iters and faster per query")
+    return [cold, warm]
+
+
 def child_snapshot(args) -> None:
     """The preemption victim: build the deterministic server, serve one
     microbatch, checkpoint, then SIGKILL this very process — nothing
@@ -146,12 +239,14 @@ def kill_resume_check(args) -> None:
            "--exchange", args.exchange, "--backend", args.backend,
            "--iters", str(args.iters), "--seed", str(args.seed),
            "--window", str(args.window)]
+    if args.tol is not None:
+        cmd += ["--tol", str(args.tol)]
     proc = subprocess.run(cmd, capture_output=True, text=True)
     assert proc.returncode == -signal.SIGKILL, (
         f"child expected to die by SIGKILL, got {proc.returncode}:\n"
         f"{proc.stdout}{proc.stderr}")
     ref = build_server(args)
-    srv = GraphServer.resume(ServiceFT(args.ckpt_dir))
+    srv = GraphServer.resume(ServiceFT(args.ckpt_dir), tol=args.tol)
     assert srv.sess.to_json() == ref.sess.to_json(), "config blob drifted"
     assert np.array_equal(srv.sess.assign, ref.sess.assign), \
         "resumed assignment differs from the pre-kill partition"
@@ -171,6 +266,12 @@ def main() -> int:
     ap.add_argument("--exchange", default="halo")
     ap.add_argument("--backend", default="np")
     ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--tol", type=float, default=None,
+                    help="convergence early-exit tolerance: --iters "
+                         "becomes a cap, the server's value caches turn "
+                         "into warm-start seeds across ingest swaps, and "
+                         "BENCH_serve.json gains post-ingest cold/warm "
+                         "rows (query_ms, iters_run)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=16)
@@ -194,6 +295,8 @@ def main() -> int:
     srv = build_server(args)
     q = drive_queries(srv, args, check=args.smoke)
     ing = drive_ingest(srv, args)
+    wc = (drive_warm_cold(srv, args, check=args.smoke)
+          if args.tol is not None else [])
     if args.smoke:
         assert ing["restreams"] >= 1, (
             f"RF watermark never tripped: trace {srv.rf_trace}")
@@ -218,12 +321,26 @@ def main() -> int:
            if ing["rf_post_restream"] is not None else None,
            "restreams": ing["restreams"],
            "ingested_edges": ing["ingested_edges"]}
+    rows = [row]
+    if args.tol is not None:
+        # pre-ingest row + one post-ingest row per temperature; the
+        # warm/tol identity columns keep trend.py from diffing a warm
+        # row against a cold one
+        row.update({"tol": args.tol, "warm": False})
+        for r in wc:
+            rows.append({"bench": "serve_post_ingest", "scale": args.scale,
+                         "k": args.k, "exchange": args.exchange,
+                         "window": args.window, "tol": args.tol,
+                         "warm": r["warm"], "iters_cap": args.iters,
+                         "iters_run": r["iters_run"],
+                         "query_ms": r["query_ms"]})
     out = (Path(args.out) if args.out else
            Path(__file__).resolve().parents[3] / "results"
            / "BENCH_serve.json")
     out.parent.mkdir(exist_ok=True)
-    out.write_text(json.dumps([row], indent=1))
-    print(",".join(f"{k}={v}" for k, v in row.items()))
+    out.write_text(json.dumps(rows, indent=1))
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
     print(f"wrote {out}")
     return 0
 

@@ -319,53 +319,74 @@ class GraphSession:
     # ------------------------------------------------------------- GAS
 
     def run(self, program="pagerank", *, iters: int | None = None,
-            exchange: str | None = None, mesh=None,
-            axis: str = "parts") -> np.ndarray:
+            exchange: str | None = None, mesh=None, axis: str = "parts",
+            tol: float | None = None, overlap: bool = False,
+            init_values=None, return_iters: bool = False):
         """Run a GAS program on the session's layout and return the dense
         (V,) master values.  ``mesh=None`` simulates the stacked k-device
         engine on one device; with a mesh (axis size == k) the program
         shard_maps one partition per device — bit-identical results by
-        construction (shared ``_gas_body``)."""
+        construction (shared ``_gas_body``).
+
+        ``tol`` turns ``iters`` into a cap: the loop exits once the
+        master residual max-norm drops to ``tol`` (``return_iters=True``
+        additionally returns the executed count).  ``overlap`` runs the
+        interleaved interior/frontier body (ragged exchanges only);
+        ``init_values`` warm-starts from a dense (V_old,) vector."""
         lay = self.partition_layout
         prog = resolve_program(program, self._num_vertices)
         iters = self.cfg.iters if iters is None else iters
         exchange = exchange or self.cfg.exchange
+        kw = dict(tol=tol, overlap=overlap, init_values=init_values,
+                  return_iters=return_iters)
         if mesh is None:
-            out = simulate_gas(prog, lay, iters=iters, exchange=exchange)
+            out = simulate_gas(prog, lay, iters=iters, exchange=exchange,
+                               **kw)
         else:
             out = shard_map_gas(prog, lay, mesh, iters=iters, axis=axis,
-                                exchange=exchange)
+                                exchange=exchange, **kw)
+        out, iters_run = out if return_iters else (out, iters)
         if np.issubdtype(out.dtype, np.integer):
             out = out.astype(np.int64)     # label/distance programs
-        return out
+        return (out, iters_run) if return_iters else out
 
     def run_many(self, programs, *, iters: int | None = None,
                  exchange: str | None = None, mesh=None,
-                 axis: str = "parts") -> list[np.ndarray]:
+                 axis: str = "parts", tol: float | None = None,
+                 overlap: bool = False, init_values=None,
+                 return_iters: bool = False):
         """Run N homogeneous programs as one fused GAS loop — a single
         mirror-sync collective per phase carries every program's lanes
         (``repro.graph.engine.FusedGAS``).  Returns one dense (V,) array
-        per program, in input order."""
+        per program, in input order.  ``tol`` / ``overlap`` /
+        ``init_values`` (one dense vector or None per program) /
+        ``return_iters`` as in ``run``."""
         lay = self.partition_layout
         progs = [resolve_program(p, self._num_vertices) for p in programs]
         iters = self.cfg.iters if iters is None else iters
         exchange = exchange or self.cfg.exchange
+        kw = dict(tol=tol, overlap=overlap, init_values=init_values,
+                  return_iters=return_iters)
         if mesh is None:
             outs = simulate_gas_many(progs, lay, iters=iters,
-                                     exchange=exchange)
+                                     exchange=exchange, **kw)
         else:
             outs = shard_map_gas_many(progs, lay, mesh, iters=iters,
-                                      axis=axis, exchange=exchange)
-        return [o.astype(np.int64)
+                                      axis=axis, exchange=exchange, **kw)
+        outs, iters_run = outs if return_iters else (outs, iters)
+        outs = [o.astype(np.int64)
                 if np.issubdtype(o.dtype, np.integer) else o
                 for o in outs]
+        return (outs, iters_run) if return_iters else outs
 
     def dryrun_step(self, program="pagerank", *, mesh, iters: int = 1,
-                    exchange: str | None = None, axis: str = "parts"):
+                    exchange: str | None = None, axis: str = "parts",
+                    overlap: bool = False):
         """(jitted_fn, example_args) for one shard_map GAS step — what
         ``launch.dryrun --graph`` lowers to parse collective bytes.
         ``program`` may be a name/GASProgram or a sequence of them; a
-        sequence compiles the fused multi-program step."""
+        sequence compiles the fused multi-program step.  ``overlap``
+        compiles the interleaved ragged body."""
         lay = self.partition_layout
         if isinstance(program, (list, tuple)):
             prog = [resolve_program(p, self._num_vertices)
@@ -373,4 +394,5 @@ class GraphSession:
         else:
             prog = resolve_program(program, self._num_vertices)
         return gas_step_for_dryrun(prog, lay, mesh, axis=axis, iters=iters,
-                                   exchange=exchange or self.cfg.exchange)
+                                   exchange=exchange or self.cfg.exchange,
+                                   overlap=overlap)

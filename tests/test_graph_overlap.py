@@ -1,0 +1,215 @@
+"""Overlapped GAS body + convergence early exit + warm start.
+
+Three identity suites for the hot-loop rework:
+
+* **overlap** — the interleaved ragged body (interior gather/local/apply
+  during the k−1 ring hops, per-hop partial combine on the frontier) is
+  a pure re-ordering: bit-identical values to the phase-ordered body on
+  every ragged exchange, and a hard error on exchanges without a ring.
+* **early exit** — ``tol`` turns ``iters`` into a cap; the tol run must
+  stop strictly early on converging programs and be bit-identical to a
+  fixed-iters run at the reported ``iters_run`` (determinism: the loop
+  mode changes when we stop, never what we compute).
+* **warm start** — ``init_values`` seeds the loop from a previous fixed
+  point; re-running from the converged state must cost ≤ 1 iteration
+  and land on the same values, including through the serving path after
+  an ingest/restream swap.
+"""
+import numpy as np
+import pytest
+
+from conftest import random_graph_and_assign
+
+from repro.dist.halo import RAGGED_EXCHANGES
+from repro.graph import build_layout, get_program, simulate_gas
+from repro.graph.engine import simulate_gas_many
+
+PROGRAMS = ("pagerank", "cc", "sssp")
+
+
+def small_layout(seed=3, k=4, n=250):
+    src, dst, n, assign = random_graph_and_assign(seed, k, n=n)
+    lay = build_layout(src, dst, assign, n, k)
+    return lay, n
+
+
+# ------------------------------------------------------------------ overlap
+
+@pytest.mark.parametrize("exchange", RAGGED_EXCHANGES)
+@pytest.mark.parametrize("pname", PROGRAMS)
+def test_overlap_bit_identical_to_phase_ordered(exchange, pname):
+    lay, n = small_layout()
+    prog = get_program(pname, n)
+    base = simulate_gas(prog, lay, iters=8, exchange=exchange)
+    over = simulate_gas(prog, lay, iters=8, exchange=exchange,
+                        overlap=True)
+    np.testing.assert_array_equal(over, base)
+
+
+def test_overlap_rejected_without_a_ring():
+    lay, n = small_layout()
+    prog = get_program("pagerank", n)
+    for exchange in ("dense", "halo", "quantized"):
+        with pytest.raises(ValueError, match="overlap"):
+            simulate_gas(prog, lay, iters=2, exchange=exchange,
+                         overlap=True)
+
+
+def test_overlap_fused_bundle_bit_identical():
+    lay, n = small_layout(seed=5)
+    bundle = [get_program(p, n) for p in ("pagerank", "ppr", "centrality")]
+    base = simulate_gas_many(bundle, lay, iters=6,
+                             exchange="ragged_quantized")
+    over = simulate_gas_many(bundle, lay, iters=6,
+                             exchange="ragged_quantized", overlap=True)
+    for b, o in zip(base, over):
+        np.testing.assert_array_equal(o, b)
+
+
+# --------------------------------------------------------------- early exit
+
+@pytest.mark.parametrize("exchange",
+                         ("dense", "halo", "ragged", "ragged_quantized"))
+def test_early_exit_matches_fixed_iters_at_iters_run(exchange):
+    """tol changes when the loop stops, never what it computes: the tol
+    run is bit-identical to a fixed run truncated at iters_run."""
+    lay, n = small_layout(seed=11)
+    prog = get_program("pagerank", n)
+    cap = 100
+    v_tol, iters_run = simulate_gas(prog, lay, iters=cap,
+                                    exchange=exchange, tol=1e-6,
+                                    return_iters=True)
+    assert 0 < iters_run < cap
+    v_fix = simulate_gas(prog, lay, iters=int(iters_run),
+                         exchange=exchange)
+    np.testing.assert_array_equal(v_tol, v_fix)
+
+
+def test_early_exit_int_program_stops_at_fixed_point():
+    """CC converges to an exact fixed point: tol=0 stops as soon as one
+    sweep changes nothing, and the answer equals the long fixed run."""
+    lay, n = small_layout(seed=13)
+    prog = get_program("cc", n)
+    v_tol, iters_run = simulate_gas(prog, lay, iters=64, exchange="ragged",
+                                    tol=0.0, return_iters=True)
+    assert iters_run < 64
+    np.testing.assert_array_equal(
+        v_tol, simulate_gas(prog, lay, iters=64, exchange="ragged"))
+
+
+def test_tol_none_keeps_fixed_iters_semantics():
+    """tol=None is the legacy fixed-iters trace — same values, and
+    return_iters reports exactly the requested count."""
+    lay, n = small_layout(seed=17)
+    prog = get_program("pagerank", n)
+    v, it = simulate_gas(prog, lay, iters=7, exchange="ragged",
+                         return_iters=True)
+    assert it == 7
+    np.testing.assert_array_equal(
+        v, simulate_gas(prog, lay, iters=7, exchange="ragged"))
+
+
+def test_zero_iters_returns_init_under_tol():
+    lay, n = small_layout(seed=19)
+    prog = get_program("pagerank", n)
+    v0, it = simulate_gas(prog, lay, iters=0, exchange="ragged", tol=1e-6,
+                          return_iters=True)
+    assert it == 0
+    np.testing.assert_array_equal(
+        v0, simulate_gas(prog, lay, iters=0, exchange="ragged"))
+
+
+# --------------------------------------------------------------- warm start
+
+def test_warm_start_from_fixed_point_costs_one_iteration():
+    """Seeding the loop with its own converged output re-converges in a
+    single verification sweep and returns the identical values."""
+    lay, n = small_layout(seed=23)
+    prog = get_program("pagerank", n)
+    cold, cold_iters = simulate_gas(prog, lay, iters=100, exchange="ragged",
+                                    tol=1e-6, return_iters=True)
+    warm, warm_iters = simulate_gas(prog, lay, iters=100, exchange="ragged",
+                                    tol=1e-6, init_values=np.asarray(cold),
+                                    return_iters=True)
+    assert warm_iters <= 1 < cold_iters
+    # the verification sweep moves the seeds by at most the residual
+    # that stopped the cold run — inside the tol envelope, not bit-equal
+    np.testing.assert_allclose(warm, cold, atol=1e-5)
+
+
+def test_empty_warm_vector_is_a_cold_run():
+    """The serving fast path ships np.zeros(0) for programs with no
+    cached fixed point — the all-False warm mask must reproduce the cold
+    run exactly (warm and cold share one compiled loop)."""
+    lay, n = small_layout(seed=29)
+    prog = get_program("pagerank", n)
+    cold = simulate_gas(prog, lay, iters=12, exchange="ragged", tol=1e-6)
+    seeded = simulate_gas(prog, lay, iters=12, exchange="ragged", tol=1e-6,
+                          init_values=np.zeros(0))
+    np.testing.assert_array_equal(seeded, cold)
+
+
+# ----------------------------------------------------- interior two-coloring
+
+@pytest.mark.parametrize("seed,k", [(0, 2), (1, 4), (2, 8)])
+def test_interior_frontier_stats_consistent(seed, k):
+    src, dst, n, assign = random_graph_and_assign(seed, k)
+    lay = build_layout(src, dst, assign, n, k)
+    st = lay.interior_frontier_stats()
+    local = lay.vert_mask.sum(axis=1)
+    np.testing.assert_array_equal(st["local_per_part"], local)
+    assert st["interior_per_part"] == list(
+        (lay.vert_mask & ~lay.frontier).sum(axis=1))
+    assert 0.0 <= st["interior_frac_min"] <= st["interior_frac"] <= 1.0
+
+
+# ------------------------------------------------------ multidevice identity
+
+@pytest.mark.multidevice
+def test_shard_map_overlap_and_warm_identity(multidevice):
+    """The per-device overlapped body matches the phase-ordered shard_map
+    run bit-for-bit, the tol loop reports the same iters_run as the
+    stacked simulator, and the multidevice HLO of the overlapped step
+    contains EXACTLY as many collective-permutes as the phase-ordered
+    one — overlap re-orders compute around the ring, it never adds or
+    drops a hop."""
+    multidevice("""
+        import numpy as np
+        from repro.core import CLUGPConfig, web_graph
+        from repro.launch.mesh import make_graph_mesh
+        from repro.session import GraphSession, SessionConfig
+
+        g = web_graph(scale=10, seed=0)
+        sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=8)))
+        sess.partition(g.src, g.dst, g.num_vertices).layout()
+        mesh = make_graph_mesh(8)
+        # AFTER jax locked its 8 virtual devices: importing dryrun
+        # rewrites XLA_FLAGS for its own 512-device default, which only
+        # matters before first init
+        from repro.launch.dryrun import collective_permute_count
+
+        base = sess.run("pagerank", iters=6, exchange="ragged", mesh=mesh)
+        over = sess.run("pagerank", iters=6, exchange="ragged", mesh=mesh,
+                        overlap=True)
+        assert np.array_equal(base, over), "overlap changed the values"
+
+        v_tol, it = sess.run("pagerank", iters=100, exchange="ragged",
+                             mesh=mesh, tol=1e-6, return_iters=True)
+        assert 0 < it < 100, it
+        sim_tol, sim_it = sess.run("pagerank", iters=100,
+                                   exchange="ragged", tol=1e-6,
+                                   return_iters=True)
+        assert it == sim_it, (it, sim_it)
+        assert np.array_equal(v_tol, sim_tol)
+
+        counts = {}
+        for overlap in (False, True):
+            jitted, args = sess.dryrun_step("pagerank", mesh=mesh,
+                                            exchange="ragged",
+                                            overlap=overlap)
+            hlo = jitted.lower(*args).compile().as_text()
+            counts[overlap] = collective_permute_count(hlo)
+        assert counts[False] > 0, counts
+        assert counts[True] == counts[False], counts
+        print("shard_map overlap identity OK", counts)
+        """, n_devices=8)

@@ -105,6 +105,37 @@ def test_ragged_ring_routes_every_mirror_exactly_once(seed, k):
     np.testing.assert_array_equal(outs["ragged"][1], outs["halo"][1])
 
 
+@given(st.integers(0, 2**16), st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_interior_frontier_is_exact_two_coloring(seed, k):
+    """The layout's interior/frontier split is an exact two-coloring of
+    the local vertex tables on any random graph/assignment: the two
+    classes are disjoint, together they cover exactly the local rows,
+    frontier == (global replication > 1) row for row, and every real
+    mirror lane in the ragged ring's send tables targets a frontier slot
+    — no interior vertex ever waits on (or feeds) a ring hop, which is
+    what lets the overlapped body compute it mid-flight."""
+    src, dst, n, assign = random_graph_and_assign(seed, k, n=200)
+    lay = build_layout(src, dst, assign, n, k)
+    interior = lay.vert_mask & ~lay.frontier
+    frontier = lay.vert_mask & lay.frontier
+    assert not (interior & frontier).any()
+    np.testing.assert_array_equal(interior | frontier, lay.vert_mask)
+    assert not (lay.frontier & ~lay.vert_mask).any(), \
+        "frontier colored a pad row"
+    replic = np.zeros(n, np.int64)
+    np.add.at(replic, lay.vert_gid[lay.vert_mask], 1)
+    np.testing.assert_array_equal(
+        frontier[lay.vert_mask], replic[lay.vert_gid[lay.vert_mask]] > 1)
+    # every mirror is frontier, and every real halo_send lane (pad slots
+    # point at l_max) addresses a frontier-colored local slot
+    mirrors = lay.vert_mask & ~lay.is_master
+    assert frontier[mirrors].all()
+    for p in range(k):
+        slots = lay.halo_send[p][lay.halo_send[p] != lay.l_max]
+        assert frontier[p, slots].all() if slots.size else True
+
+
 @given(st.integers(0, 2**16), st.sampled_from(["sssp", "labelprop"]),
        st.integers(2, 8))
 @settings(max_examples=10, deadline=None)

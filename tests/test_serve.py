@@ -178,6 +178,54 @@ def test_window_ingest_flush_and_watermark_restream():
     assert srv.sess.partition_layout.num_edges == len(srv.sess.edges[0])
 
 
+def test_tol_server_warm_starts_after_swap():
+    """With ``tol`` set the server's value caches double as warm-start
+    seeds: after a window flush + restream swaps the layout, the next
+    query re-converges from the pre-swap fixed point in strictly fewer
+    iterations than a cold run on the grown graph — and lands within the
+    convergence envelope of the cold fixed point."""
+    srv, g = make_server(window=400, rf_watermark=1.01,
+                         restream_passes=2, tol=1e-6, iters=40)
+    t = srv.submit("score", program="pagerank", vertices=[0])
+    srv.step()
+    assert srv.result(t).error is None
+    first_iters = max(srv.last_iters_run.values())
+    assert 0 < first_iters <= 40
+    rng = np.random.default_rng(6)
+    n = g.num_vertices
+    for _ in range(4):
+        srv.ingest(rng.integers(0, n, 110), rng.integers(0, n, 110))
+    assert srv.stats["restreams"] >= 1
+    assert not srv._values          # swap invalidated the caches...
+    assert srv._warm                # ...into warm-start seeds
+    srv.last_iters_run.clear()
+    t2 = srv.submit("score", program="pagerank", vertices=[0, 1])
+    srv.step()
+    assert srv.result(t2).error is None
+    warm_iters = max(srv.last_iters_run.values())
+    cold, cold_iters = srv.sess.run_many(
+        ["pagerank"], iters=40, exchange="halo", tol=1e-6,
+        init_values=[np.zeros(0)], return_iters=True)
+    assert warm_iters < cold_iters, (warm_iters, cold_iters)
+    # both runs stopped inside the tol envelope of the same fixed point
+    warm_full = srv._values[("pagerank", "halo")]
+    np.testing.assert_allclose(warm_full, cold[0], atol=1e-4)
+
+
+def test_tol_server_cold_and_warm_share_compute_semantics():
+    """A tol server with nothing cached runs the cold path through the
+    same loop: its replies bit-match a direct ``run_many`` with the same
+    tol and empty seeds."""
+    srv, g = make_server(tol=1e-6, iters=40)
+    verts = [0, 1, 2, 3]
+    t = srv.submit("score", program="pagerank", vertices=verts)
+    srv.step()
+    direct, _ = srv.sess.run_many(
+        ["pagerank"], iters=40, exchange="halo", tol=1e-6,
+        init_values=[np.zeros(0)], return_iters=True)
+    assert np.array_equal(srv.result(t).value, direct[0][verts])
+
+
 def test_ingest_can_grow_the_vertex_set():
     srv, g = make_server(window=50)
     n0 = srv.sess.num_vertices
