@@ -16,7 +16,7 @@ from __future__ import annotations
 import sys
 import time
 
-from repro.core import CLUGPConfig, metrics, partition, web_graph
+from repro.core import CLUGPConfig, partition, web_graph
 from repro.core.graphgen import social_graph
 from .common import quality_row
 

@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import (CLUGPConfig, baselines, metrics, partition,
                         random_stream)
 

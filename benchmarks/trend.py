@@ -41,7 +41,12 @@ GOOD_UP_HINTS = ("speedup",)
 # counts jit compilations of the stacked k-sweep — fewer is the whole
 # point of compile-once batching
 GOOD_DOWN_HINTS = ("bytes", "_mb", "comm", "mirrors", "edge_us",
-                   "us_per_edge", "compiles", "query_ms", "rf_")
+                   "us_per_edge", "compiles", "query_ms", "rf_",
+                   "findings", "allowlisted", "violations", "errors")
+# "findings"/"allowlisted"/"violations"/"errors" are the static-analysis
+# artifact's per-rule counts (results/ANALYSIS.json): the allowlist's
+# burn-down contract makes them lower-is-better and never-noise — any
+# increase is a regression the CI diff must flag, not jitter
 # "query_ms" is the serve artifact's per-query latency (best-effort warm
 # measurement, the row's whole point — diffs lower-is-better instead of
 # hiding as noise) and "rf_" its replication watermarks (rf_base /
@@ -71,7 +76,8 @@ def find_bench(path: str) -> Path | None:
     if p.is_file():
         return p
     if p.is_dir():
-        cands = sorted(p.rglob("BENCH_*.json"),
+        cands = sorted(list(p.rglob("BENCH_*.json"))
+                       + list(p.rglob("ANALYSIS.json")),
                        key=lambda f: f.stat().st_mtime)
         if cands:
             return cands[-1]

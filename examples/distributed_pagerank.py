@@ -7,8 +7,7 @@ the comm-volume dependence on partition quality (Fig. 8's mechanism).
 import numpy as np
 
 from repro.core import CLUGPConfig, baselines, random_stream, web_graph
-from repro.graph import reference_cc, reference_pagerank, simulate_cc, \
-    simulate_pagerank
+from repro.graph import reference_cc, reference_pagerank
 from repro.session import GraphSession
 
 K = 8
@@ -35,18 +34,18 @@ for name, lay in (("clugp", lay_clugp), ("hashing", lay_hash)):
 
 ref = reference_pagerank(g.src, g.dst, g.num_vertices, iters=30)
 for exchange in ("halo", "quantized"):
-    pr = simulate_pagerank(lay_clugp, iters=30, exchange=exchange)
+    pr = sess.run("pagerank", iters=30, exchange=exchange)
     print(f"pagerank[{exchange}]: max|err|={np.abs(pr-ref).max():.2e} "
           f"(30 iters)")
 
 # pagerank to convergence rather than a fixed sweep count: tol makes 60
 # a cap and the early-exit loop reports the executed count
-pr, it = simulate_pagerank(lay_clugp, iters=60, exchange="ragged",
-                           tol=1e-6, return_iters=True)
+pr, it = sess.run("pagerank", iters=60, exchange="ragged",
+                  tol=1e-6, return_iters=True)
 print(f"pagerank[ragged, tol=1e-6]: max|err|={np.abs(pr-ref).max():.2e} "
       f"({it} of 60 capped iters)")
 
-cc, it = simulate_cc(lay_clugp, iters=30, tol=0, return_iters=True)
+cc, it = sess.run("cc", iters=30, tol=0, return_iters=True)
 rcc = reference_cc(g.src, g.dst, g.num_vertices)
 print(f"connected components: label match={np.mean(cc == rcc)*100:.1f}% "
       f"({len(np.unique(rcc))} components, {it} sweeps to fixed point)")

@@ -1,0 +1,31 @@
+"""Static-analysis subsystem: machine-checked architecture guardrails.
+
+Two layers:
+
+- **Source lint** (``repro.analysis.lint`` + ``repro.analysis.rules``):
+  an AST rule engine over the tree with repo-specific rules —
+  RAW-COLLECTIVE (mesh-facing code goes through ``repro.dist``, not raw
+  ``lax`` collectives), STAGE-PLUMB (strategies may not re-plumb stage
+  internals), SESSION-BYPASS (launchers/examples/benchmarks drive
+  ``GraphSession``, not hand-wired partition → layout → engine chains),
+  DEPRECATED-API (no calls to the retired ``comm_bytes_*`` shims or the
+  removed ``clugp_partition*`` entry points) and JIT-PURITY (no host
+  clocks/RNG inside traced code paths).  Findings check against the
+  tracked allowlist (``repro.analysis.allowlist``) whose per-entry counts
+  may only burn down.
+
+- **IR analyzers** (``repro.analysis.ir``): reusable jaxpr/HLO passes —
+  the post-SPMD collective-bytes / collective-permute parsers (the
+  ``launch.dryrun`` gates are clients), a retrace counter, a dtype-drift
+  check, a loop-carried scatter-copy detector (the XLA:CPU 542 µs/edge
+  class of bug) and an unreduced-divergence check for shard_map bodies.
+
+CLI: ``python -m repro.analysis --check [--ir]`` — runs the lint (and
+the IR self-audit with ``--ir``), writes ``results/ANALYSIS.json`` for
+the CI trend gate, and exits non-zero on any non-allowlisted finding.
+
+This module stays import-light (no jax) so the lint path is fast; import
+``repro.analysis.ir`` explicitly for the jaxpr/HLO passes.
+"""
+from .lint import (Allow, Finding, Report, Rule,  # noqa: F401
+                   lint_file, repo_root, run_lint)

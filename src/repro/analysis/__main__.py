@@ -1,0 +1,143 @@
+"""CLI: ``python -m repro.analysis --check [--ir]``.
+
+Runs the source lint (always) and the IR self-audit (``--ir``), prints
+findings, writes the trend-gated artifact to ``results/ANALYSIS.json``
+and exits non-zero on any non-allowlisted finding, allowlist-count
+mismatch or failed IR invariant.  ``--check`` is accepted for symmetry
+with the other gates (``launch.dryrun --check``); it is the default and
+only behaviour.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .lint import repo_root, run_lint
+
+
+def ir_audit() -> tuple[list[dict], list[str]]:
+    """Self-audit: run the jaxpr passes over the repo's own hot bodies.
+
+    Each row mirrors a lint rule row (lower-is-better counts) so the
+    trend gate covers compiled-IR health the same way it covers source
+    health:
+
+    - ``dtype-drift`` over the stacked quantized pagerank body — the
+      wire payload must stay narrow end-to-end;
+    - ``scatter-copy`` over the jitted transform scan — the arithmetic
+      one-hot rewrite must not regress back to a loop-carried scatter;
+    - ``unreduced-divergence`` over the shard_mapped GAS step;
+    - ``retrace`` over the transform entry — shape-stable args must
+      reuse one trace.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    from . import ir
+    from repro.core import CLUGPConfig, web_graph
+    from repro.core.transform import transform_jax
+    from repro.graph.engine import _gas_body, _stack_dev, get_exchange
+    from repro.session import GraphSession, resolve_program
+
+    errors: list[str] = []
+    rows: list[dict] = []
+
+    def row(check: str, sites: list, detail=None):
+        rows.append({"bench": "ir_audit", "rule": check,
+                     "findings": len(sites), "violations": len(sites),
+                     "allowlisted": 0,
+                     "detail": detail if detail is not None
+                     else [str(s) for s in sites]})
+        if sites:
+            errors.append(f"{check}: {sites}")
+
+    g = web_graph(scale=8, edge_factor=8, seed=0)
+    k = 4
+    sess = GraphSession(CLUGPConfig.optimized(k))
+    sess.partition(g.src, g.dst, g.num_vertices)
+    lay = sess.partition_layout
+
+    # 1. dtype drift in one sweep of the stacked quantized GAS body (the
+    #    wire payload must stay u8 codes + f32 scales — no f16→f32
+    #    re-promotion, no x64 leak)
+    prog = resolve_program("pagerank", g.num_vertices)
+    dev = _stack_dev(lay, "quantized")
+    ex = get_exchange("quantized", lay)
+    body = _gas_body(prog, ex, dev)
+    value0 = jax.vmap(prog.init)(dev)
+    state0 = ex.init_state(dev, prog.dtype, prog.combine)
+    step_jaxpr = ir.make_jaxpr(lambda carry: body(0, carry),
+                               (value0, state0))
+    row("dtype-drift", ir.dtype_drift(step_jaxpr))
+
+    # 2. loop-carried computed-index scatters in the transform scan
+    vp = np.zeros(g.num_vertices, np.int32)
+    deg = np.ones(g.num_vertices, np.int32)
+    div = np.zeros(g.num_vertices, np.int32)
+    tr_jaxpr = ir.make_jaxpr(
+        partial(transform_jax, k=k),
+        jnp.asarray(g.src, jnp.int32), jnp.asarray(g.dst, jnp.int32),
+        jnp.asarray(vp), jnp.asarray(deg), jnp.asarray(div))
+    row("scatter-copy", ir.scatter_copy_sites(tr_jaxpr))
+
+    # 3. divergence across the quantized step (stacked body has no
+    #    shard_map eqns → trivially clean; still exercises the walker)
+    row("unreduced-divergence", ir.unreduced_divergence(step_jaxpr))
+
+    # 4. retraces: 3 same-shape transform calls must share one trace
+    arg_sets = [
+        (jnp.asarray(g.src, jnp.int32), jnp.asarray(g.dst, jnp.int32),
+         jnp.asarray(np.full(g.num_vertices, i % k, np.int32)),
+         jnp.asarray(deg), jnp.asarray(div))
+        for i in range(3)]
+    n = ir.retrace_count(partial(transform_jax, k=k), arg_sets)
+    extra = n - 1
+    row("retrace", [f"{n} traces for 3 same-shape calls"] if extra else [],
+        detail=[f"traces={n}"])
+    return rows, errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--check", action="store_true",
+                    help="run the lint gate (default behaviour)")
+    ap.add_argument("--ir", action="store_true",
+                    help="additionally run the IR self-audit (imports "
+                         "jax, compiles small cells)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="artifact path (default results/ANALYSIS.json "
+                         "under the repo root)")
+    ap.add_argument("--root", default=None,
+                    help="tree to lint (default: the repo root)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print allowlisted findings")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else repo_root()
+    report = run_lint(root=root)
+    print(report.format(verbose=args.verbose))
+
+    rows = report.summary_rows()
+    ir_errors: list[str] = []
+    if args.ir:
+        ir_rows, ir_errors = ir_audit()
+        rows += ir_rows
+        for e in ir_errors:
+            print(f"ir audit: {e}")
+        print(f"ir audit: {len(ir_rows)} check(s), "
+              f"{len(ir_errors)} failure(s)")
+
+    out = Path(args.json_out) if args.json_out \
+        else root / "results" / "ANALYSIS.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"wrote {out}")
+    return 0 if report.ok and not ir_errors else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

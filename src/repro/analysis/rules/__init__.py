@@ -1,0 +1,19 @@
+"""The rule registry.  Each module defines one architecture guardrail;
+``DEFAULT_RULES`` is what ``python -m repro.analysis --check`` and the
+pytest wrappers run."""
+from .raw_collective import RawCollective
+from .stage_plumb import StagePlumb
+from .session_bypass import SessionBypass
+from .deprecated_api import DeprecatedApi
+from .jit_purity import JitPurity
+
+DEFAULT_RULES = (
+    RawCollective(),
+    StagePlumb(),
+    SessionBypass(),
+    DeprecatedApi(),
+    JitPurity(),
+)
+
+__all__ = ["DEFAULT_RULES", "RawCollective", "StagePlumb", "SessionBypass",
+           "DeprecatedApi", "JitPurity"]

@@ -1,0 +1,58 @@
+"""DEPRECATED-API: no new callers of retired surfaces.
+
+Two retired families:
+
+- the per-wire ``comm_bytes_*`` methods (PR 7 consolidated them into the
+  keyword-routed ``PartitionLayout.comm_bytes(...)``); the shims still
+  exist and warn, but in-tree code must use the router.  The one
+  legitimate caller is the shim-equivalence test itself — allowlisted.
+- the PR 5 ``clugp_partition`` / ``clugp_partition_parallel`` entry
+  points, removed in PR 8.  Any *identifier* reference (name, attribute,
+  import) is a finding; mentions inside strings/docstrings — e.g. the
+  ``hasattr(mod, "clugp_partition")`` negative tests — are fine, which is
+  exactly why this replaced the old substring grep gate.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import Rule
+
+REMOVED_NAMES = frozenset({"clugp_partition", "clugp_partition_parallel"})
+DEPRECATED_PREFIX = "comm_bytes_"
+
+
+class DeprecatedApi(Rule):
+    id = "DEPRECATED-API"
+    description = ("no calls to the deprecated comm_bytes_* shims; no "
+                   "identifier references to the removed clugp_partition* "
+                   "entry points")
+    roots = ("src", "examples", "benchmarks", "tests")
+    excludes = ("src/repro/analysis",)
+
+    def run(self, tree, relpath, text):
+        out = []
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr.startswith(DEPRECATED_PREFIX)):
+                out.append(self.finding(
+                    relpath, node, node.func.attr,
+                    f"calls deprecated shim .{node.func.attr}() — use "
+                    f"comm_bytes(...) / session.comm_bytes(...)"))
+            elif isinstance(node, ast.Name) and node.id in REMOVED_NAMES:
+                out.append(self.finding(
+                    relpath, node, node.id,
+                    f"references removed entry point {node.id!r}"))
+            elif (isinstance(node, ast.Attribute)
+                  and node.attr in REMOVED_NAMES):
+                out.append(self.finding(
+                    relpath, node, node.attr,
+                    f"references removed entry point {node.attr!r}"))
+            elif isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name in REMOVED_NAMES:
+                        out.append(self.finding(
+                            relpath, node, alias.name,
+                            f"imports removed entry point {alias.name!r}"))
+        return out

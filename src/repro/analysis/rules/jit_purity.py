@@ -1,0 +1,207 @@
+"""JIT-PURITY: no host clocks or host RNG inside traced code paths.
+
+A ``time.time()`` / ``random.random()`` / ``np.random.*`` call inside a
+jitted function executes ONCE at trace time and bakes a constant into
+the compiled program — the classic "my timestamp never changes" /
+"my noise is identical every step" bug.  Static host math (plain
+``np.*`` shape arithmetic) is fine; it's the *stateful* host calls that
+are wrong under trace.
+
+Traced contexts are found structurally, without importing the module:
+
+- functions decorated with ``jit`` / ``jax.jit`` / ``partial(jax.jit,
+  ...)`` or wrapped by ``shard_map``;
+- functions passed to tracing higher-order entry points at the
+  positions JAX traces them: ``jit``/``shard_map``/``vmap``/``grad``
+  arg 0, ``lax.scan`` arg 0, ``lax.fori_loop`` arg 2,
+  ``lax.while_loop`` args 0-1, ``lax.cond`` args 1-2, ``lax.switch``
+  args 1+;
+- known always-traced bodies by name (``run_clugp_body``,
+  ``_gas_body``, ``_gas_body_multi``);
+- transitively: any module-local function *called from* a traced
+  function (fixpoint over same-file call edges).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import Rule
+
+# module path prefixes whose calls are impure under trace
+IMPURE_MODULES = ("time", "random", "numpy.random")
+
+TRACING_DECORATORS = frozenset({"jit", "shard_map", "pmap", "checkpoint"})
+SEED_NAMES = frozenset({"run_clugp_body", "_gas_body", "_gas_body_multi"})
+# callable-name -> argument positions that get traced
+HOF_TRACED_ARGS = {
+    "jit": (0,), "shard_map": (0,), "vmap": (0,), "pmap": (0,),
+    "grad": (0,), "value_and_grad": (0,), "checkpoint": (0,),
+    "scan": (0,), "fori_loop": (2,), "while_loop": (0, 1),
+    "cond": (1, 2), "switch": None,  # None → every arg from 1 on
+}
+
+
+def _callable_name(fn: ast.expr) -> str | None:
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _dotted(node: ast.expr) -> str | None:
+    """`np.random.rand` → "np.random.rand"; None if not a pure chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _ModuleIndex:
+    """Per-file symbol tables: import aliases, function defs, call edges."""
+
+    def __init__(self, tree: ast.Module):
+        self.alias_to_module: dict[str, str] = {}   # np -> numpy
+        self.name_to_module: dict[str, str] = {}    # time -> time.time
+        self.defs: dict[str, list[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:            # import numpy.random as nr
+                        self.alias_to_module[a.asname] = a.name
+                    else:                   # import numpy[.random] binds
+                        head = a.name.split(".")[0]     # the head name
+                        self.alias_to_module[head] = head
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.name_to_module[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, []).append(node)
+
+    def resolve(self, call: ast.Call) -> str | None:
+        """Fully-qualified dotted path of the call target, through import
+        aliases — `np.random.rand()` → "numpy.random.rand"."""
+        dotted = _dotted(call.func)
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        if head in self.alias_to_module:
+            base = self.alias_to_module[head]
+            return f"{base}.{rest}" if rest else base
+        if head in self.name_to_module:
+            base = self.name_to_module[head]
+            return f"{base}.{rest}" if rest else base
+        return dotted
+
+    def impure(self, call: ast.Call) -> str | None:
+        path = self.resolve(call)
+        if path is None:
+            return None
+        for mod in IMPURE_MODULES:
+            if path == mod or path.startswith(mod + "."):
+                return path
+        return None
+
+
+def _decorated_traced(fn) -> bool:
+    for dec in fn.decorator_list:
+        name = _callable_name(dec if not isinstance(dec, ast.Call)
+                              else dec.func)
+        if name in TRACING_DECORATORS:
+            return True
+        if isinstance(dec, ast.Call) and _callable_name(dec.func) == \
+                "partial" and dec.args:
+            inner = _callable_name(dec.args[0])
+            if inner in TRACING_DECORATORS:
+                return True
+    return False
+
+
+def _traced_arg_exprs(tree: ast.Module):
+    """Expressions handed to tracing HOFs at their traced positions."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _callable_name(node.func)
+        if name not in HOF_TRACED_ARGS:
+            continue
+        positions = HOF_TRACED_ARGS[name]
+        if positions is None:  # switch: every branch callable
+            yield from node.args[1:]
+        else:
+            for i in positions:
+                if i < len(node.args):
+                    yield node.args[i]
+        for kw in node.keywords:
+            if kw.arg in ("f", "fun", "body_fun", "cond_fun", "body"):
+                yield kw.value
+
+
+class JitPurity(Rule):
+    id = "JIT-PURITY"
+    description = ("no host clocks / host RNG (time.*, random.*, "
+                   "np.random.*) inside traced code paths")
+    roots = ("src/repro",)
+    excludes = ("src/repro/analysis",)
+
+    def run(self, tree, relpath, text):
+        index = _ModuleIndex(tree)
+        traced: set[int] = set()          # id() of traced def nodes
+        worklist: list[ast.AST] = []
+
+        def mark(fn):
+            if id(fn) not in traced:
+                traced.add(id(fn))
+                worklist.append(fn)
+
+        for defs in index.defs.values():
+            for fn in defs:
+                if _decorated_traced(fn) or fn.name in SEED_NAMES:
+                    mark(fn)
+        lambda_bodies: list[ast.Lambda] = []
+        for expr in _traced_arg_exprs(tree):
+            if isinstance(expr, ast.Lambda):
+                lambda_bodies.append(expr)
+            else:
+                name = _callable_name(expr)
+                for fn in index.defs.get(name or "", []):
+                    mark(fn)
+
+        # fixpoint: functions called from traced bodies are traced too
+        # (lambda args to HOFs also pull in the local functions they call)
+        def local_callees(node):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    name = _callable_name(sub.func)
+                    yield from index.defs.get(name or "", [])
+
+        for lam in lambda_bodies:
+            for fn in local_callees(lam):
+                mark(fn)
+        while worklist:
+            fn = worklist.pop()
+            for callee in local_callees(fn):
+                mark(callee)
+
+        out = []
+        seen_calls: set[int] = set()
+        bodies = [fn for defs in index.defs.values() for fn in defs
+                  if id(fn) in traced] + lambda_bodies
+        for body in bodies:
+            for sub in ast.walk(body):
+                if (isinstance(sub, ast.Call) and id(sub) not in seen_calls):
+                    path = index.impure(sub)
+                    if path:
+                        seen_calls.add(id(sub))
+                        ctx = getattr(body, "name", "<lambda>")
+                        out.append(self.finding(
+                            relpath, sub, path,
+                            f"host-impure call {path}() inside traced "
+                            f"context {ctx!r} — value is baked in at "
+                            f"trace time"))
+        return out

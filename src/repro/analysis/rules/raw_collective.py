@@ -1,0 +1,58 @@
+"""RAW-COLLECTIVE: mesh collectives go through ``repro.dist``, not raw
+``jax.lax``.
+
+The dist layer owns the sharding rule tables, the halo-exchange wire
+formats and the named-axis reduction helpers
+(``repro.dist.collectives``); a raw ``lax.psum`` elsewhere bypasses the
+comm-bytes accounting and the axis-name plumbing those layers maintain.
+Flags attribute access ``lax.<collective>`` / ``jax.lax.<collective>``
+and ``from jax.lax import <collective>`` anywhere under ``src/repro``
+except the dist layer itself.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import Rule
+
+COLLECTIVES = frozenset({
+    "psum", "pmax", "pmin", "pmean",
+    "all_gather", "all_to_all", "ppermute", "pshuffle", "psum_scatter",
+})
+
+
+def _is_lax(node: ast.expr) -> bool:
+    # `lax.psum` or `jax.lax.psum`
+    if isinstance(node, ast.Name):
+        return node.id == "lax"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "lax"
+    return False
+
+
+class RawCollective(Rule):
+    id = "RAW-COLLECTIVE"
+    description = ("no raw lax collectives outside repro/dist — use "
+                   "repro.dist.collectives / the halo exchange registry")
+    roots = ("src/repro",)
+    excludes = ("src/repro/dist", "src/repro/analysis")
+
+    def run(self, tree, relpath, text):
+        out = []
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr in COLLECTIVES
+                    and _is_lax(node.value)):
+                out.append(self.finding(
+                    relpath, node, node.attr,
+                    f"raw lax.{node.attr} — route through "
+                    f"repro.dist.collectives"))
+            elif (isinstance(node, ast.ImportFrom)
+                  and node.module == "jax.lax"):
+                for alias in node.names:
+                    if alias.name in COLLECTIVES:
+                        out.append(self.finding(
+                            relpath, node, alias.name,
+                            f"imports {alias.name} from jax.lax — route "
+                            f"through repro.dist.collectives"))
+        return out

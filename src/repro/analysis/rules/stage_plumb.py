@@ -1,0 +1,67 @@
+"""STAGE-PLUMB: strategies compose stages; they may not re-plumb stage
+internals.
+
+``core/partitioner.py`` holds the partitioning *strategies* — they must
+go through ``run_clugp_body`` / the ``repro.core.stages`` pipeline, not
+call the pass-level kernels (clustering, game rounds, transform,
+restream majority) directly.  Keeping the strategies kernel-free is what
+guarantees every strategy exercises the ONE pipeline body the tests and
+benches cover.  This rule replaces the old source-grep in
+tests/test_stages.py with an AST check: any identifier reference to a
+stage internal (call, attribute or import) is a finding.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import Rule
+
+# pass-level kernels only the stage layer may touch; prefix-matched so
+# e.g. majority_vertex_map_np / _jax are both covered
+STAGE_INTERNALS = (
+    "streaming_clustering",
+    "jax_game_rounds",
+    "best_response_rounds",
+    "transform_np",
+    "transform_jax",
+    "majority_vertex_map",
+)
+
+
+def _match(name: str) -> str | None:
+    for forb in STAGE_INTERNALS:
+        if name == forb or name.startswith(forb + "_"):
+            return forb
+    return None
+
+
+class StagePlumb(Rule):
+    id = "STAGE-PLUMB"
+    description = ("strategies (core/partitioner.py) may not call stage "
+                   "internals — compose run_clugp_body / stages instead")
+    roots = ("src/repro/core/partitioner.py",)
+
+    def run(self, tree, relpath, text):
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Name):
+                forb = _match(node.id)
+                if forb:
+                    out.append(self.finding(
+                        relpath, node, forb,
+                        f"strategy references stage internal {node.id!r}"))
+            elif isinstance(node, ast.Attribute):
+                forb = _match(node.attr)
+                if forb:
+                    out.append(self.finding(
+                        relpath, node, forb,
+                        f"strategy references stage internal {node.attr!r}"))
+            elif isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    forb = _match(alias.name)
+                    if forb:
+                        out.append(self.finding(
+                            relpath, node, forb,
+                            f"strategy imports stage internal "
+                            f"{alias.name!r}"))
+        return out

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from .game import best_response_rounds, contract
 
 
 def _hash2(u: np.ndarray | int, v: np.ndarray | int, k: int):

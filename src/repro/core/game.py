@@ -28,6 +28,8 @@ import scipy.sparse as sp
 import jax
 import jax.numpy as jnp
 
+from ..dist import collectives as coll
+
 
 @dataclass
 class ClusterGraph:
@@ -296,11 +298,10 @@ def jax_game_rounds(xs, xd, sizes, row_tot, k: int, lam, *,
                                  k if k_real is None else k_real,
                                  dtype=jnp.int32)
     loads0 = jnp.zeros((kpad,), jnp.float32).at[assign0].add(sizes)
-    if axis is not None:
-        loads0 = jax.lax.psum(loads0, axis)
+    loads0 = coll.psum(loads0, axis)
 
     def psum_(x):
-        return jax.lax.psum(x, axis) if axis is not None else x
+        return coll.psum(x, axis)
 
     def batch_body(b, carry):
         assign, loads, moved, rnd = carry
@@ -456,8 +457,7 @@ def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
                                  k if k_real is None else k_real,
                                  dtype=jnp.int32)
     loads0 = jnp.zeros((k,), jnp.float32).at[assign0].add(sizes)
-    if axis is not None:
-        loads0 = jax.lax.psum(loads0, axis)
+    loads0 = coll.psum(loads0, axis)
 
     lanes = jnp.arange(k)
     ar = jnp.arange(m_cap, dtype=jnp.int32)
@@ -486,9 +486,7 @@ def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
     def phi_of(assign, loads, aff):
         """Φ (Definition 4); Σ_i (row_tot − aff[i,a_i]) double-counts
         each symmetrized pair, hence the 0.25."""
-        cut = jnp.sum(row_tot - aff[ar, assign])
-        if axis is not None:
-            cut = jax.lax.psum(cut, axis)
+        cut = coll.psum(jnp.sum(row_tot - aff[ar, assign]), axis)
         return (lam / (2 * kf)) * jnp.sum(loads * loads) + 0.25 * cut
 
     stall_rounds = 4
@@ -509,8 +507,8 @@ def jax_game_rounds_gs(row, col, w, sizes, row_tot, k: int, lam, *,
             # remote batches see this round's deltas only now (§V-D
             # shared-nothing approximation)
             local = jnp.zeros((k,), jnp.float32).at[assign].add(sizes)
-            loads = jax.lax.psum(local, axis)
-            moved = jax.lax.psum(moved, axis)
+            loads = coll.psum(local, axis)
+            moved = coll.psum(moved, axis)
         return (assign, loads, rnd + 1, moved, best_assign, best_phi,
                 stall)
 

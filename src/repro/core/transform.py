@@ -19,6 +19,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..dist import collectives as coll
+
 
 def transform_np(src: np.ndarray, dst: np.ndarray,
                  vertex_part: np.ndarray, deg: np.ndarray,
@@ -156,6 +158,5 @@ def majority_vertex_map_jax(src, dst, assign, num_vertices: int, k: int,
     cnt = (jnp.zeros((num_vertices, k), jnp.int32)
            .at[src, assign].add(1, mode="drop")
            .at[dst, assign].add(1, mode="drop"))
-    if axis is not None:
-        cnt = jax.lax.psum(cnt, axis)
+    cnt = coll.psum(cnt, axis)
     return jnp.argmax(cnt, axis=1).astype(jnp.int32)

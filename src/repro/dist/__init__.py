@@ -10,6 +10,7 @@ Everything runs on CPU under
 path the production pod meshes lower through.
 """
 from . import _compat  # noqa: F401  (installs jax.shard_map on old jax)
+from . import collectives  # noqa: F401  (axis-wide reduction helpers)
 from .halo import (DenseExchange, HaloExchange,  # noqa: F401
                    QuantizedHaloExchange, get_exchange)
 from .sharding import (CP_SERVE_RULES, MULTI_POD_RULES,  # noqa: F401

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .partition import PartitionLayout
+from ..dist import collectives as coll
 from ..dist._compat import shard_map
 from ..dist.halo import RAGGED_EXCHANGES, get_exchange
 
@@ -437,7 +438,7 @@ def _gas_body(program: GASProgram, ex, dev, axis: str | None = None,
         value, state = carry
         if program.aux is not None:
             aux = (jnp.sum(jax.vmap(program.aux)(value, dev)) if stacked
-                   else jax.lax.psum(program.aux(value, dev), axis))
+                   else coll.psum(program.aux(value, dev), axis))
         else:
             aux = None
         if stacked:
@@ -490,7 +491,7 @@ def _residual(new, old, mask, axis: str | None = None):
     else:
         d = jnp.abs(new - old)
     r = jnp.max(jnp.where(mask, d, 0)).astype(jnp.float32)
-    return jax.lax.pmax(r, axis) if axis is not None else r
+    return coll.pmax(r, axis)
 
 
 def _converge_loop(body, value, state, iters: int, tol: float, mask,
@@ -751,7 +752,7 @@ def _gas_body_multi(fused: FusedGAS, ex, dev, axis: str | None = None,
                     jnp.sum(jax.vmap(programs[i].aux)(value[:, i], dev))
                     for i in idx])
             else:
-                per = jax.lax.psum(
+                per = coll.psum(
                     jnp.stack([programs[i].aux(value[i], dev)
                                for i in idx]), axis)
             for j, i in enumerate(idx):

@@ -13,7 +13,6 @@ DMA).  Grid over row blocks.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from .flash_attention import flash_attention as _flash
 from .game_bestresponse import game_bestresponse as _gbr

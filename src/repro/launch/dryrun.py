@@ -16,10 +16,10 @@ Usage:
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
+import warnings
 from pathlib import Path
 
 import jax
@@ -52,12 +52,14 @@ PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # B/s / chip
 ICI_BW = 50e9                # B/s / link
 
-COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
-                    "all-to-all", "collective-permute")
-SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
-               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
-               "f8e5m2": 1, "s16": 2, "u16": 2}
+# The HLO collective parsers moved to repro.analysis.ir (PR 10) — the
+# names below are deprecation shims so external `dryrun.collective_bytes`
+# callers keep working; in-file call sites use the ir implementations.
+from repro.analysis.ir import (COLLECTIVE_KINDS, DTYPE_BYTES,  # noqa: F401
+                               SHAPE_RE)
+from repro.analysis.ir import collective_bytes as _collective_bytes
+from repro.analysis.ir import \
+    collective_permute_count as _collective_permute_count
 
 
 def cost_dict(compiled) -> dict:
@@ -69,58 +71,22 @@ def cost_dict(compiled) -> dict:
 
 
 def collective_bytes(hlo_text: str) -> dict:
-    """Per-device output bytes of every collective instruction, by kind.
-
-    Anchored on the instruction name left of ``=`` and summing every
-    ``dtype[dims]`` in the output type — which may be a tuple:  XLA:CPU
-    lowers ``all_to_all`` to ``(f32[1,H], …×k) all-to-all(…)``.  Async
-    ``-done`` halves are skipped (their output repeats the start's)."""
-    out = {}
-    for line in hlo_text.splitlines():
-        head, sep, rest = line.partition("=")
-        if not sep:
-            continue
-        name = head.strip().removeprefix("ROOT").strip().lstrip("%")
-        kind = next((kd for kd in COLLECTIVE_KINDS
-                     if name.startswith(kd)), None)
-        if kind is None or "-done" in name:
-            continue
-        idx = rest.find(kind)
-        out_type = rest[:idx] if idx >= 0 else rest
-        shapes = SHAPE_RE.findall(out_type)
-        if "-start" in name and len(shapes) > 1:
-            # async start tuples are (aliased operand, result, …): the
-            # first element is the input, not wire traffic
-            shapes = shapes[1:]
-        b = 0
-        for dt, dims in shapes:
-            size = 1
-            for d in dims.split(","):
-                if d:
-                    size *= int(d)
-            b += size * DTYPE_BYTES.get(dt, 4)
-        out[kind] = out.get(kind, 0) + b
-    out["total"] = sum(v for k, v in out.items() if k != "total")
-    return out
+    """Deprecated shim — use ``repro.analysis.ir.collective_bytes``."""
+    warnings.warn(
+        "repro.launch.dryrun.collective_bytes moved to "
+        "repro.analysis.ir.collective_bytes", DeprecationWarning,
+        stacklevel=2)
+    return _collective_bytes(hlo_text)
 
 
 def collective_permute_count(hlo_text: str) -> int:
-    """Number of collective-permute instructions in the post-SPMD HLO.
-
-    Same name-anchoring as ``collective_bytes`` (instruction name left of
-    ``=``, async ``-done`` halves skipped so a start/done pair counts
-    once).  The overlapped ragged body must keep this count identical to
-    the phase-ordered body: overlap re-orders compute around the k−1
-    ring hops, it must never add or drop a hop."""
-    n = 0
-    for line in hlo_text.splitlines():
-        head, sep, _ = line.partition("=")
-        if not sep:
-            continue
-        name = head.strip().removeprefix("ROOT").strip().lstrip("%")
-        if name.startswith("collective-permute") and "-done" not in name:
-            n += 1
-    return n
+    """Deprecated shim — use
+    ``repro.analysis.ir.collective_permute_count``."""
+    warnings.warn(
+        "repro.launch.dryrun.collective_permute_count moved to "
+        "repro.analysis.ir.collective_permute_count", DeprecationWarning,
+        stacklevel=2)
+    return _collective_permute_count(hlo_text)
 
 
 def zero_default(cfg) -> bool:
@@ -272,12 +238,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
                     cfg, shape_name, mesh, rules, mp=mp,
                     multi_pod=multi_pod, block_kv=block_kv,
                     loss_chunk=loss_chunk, compress=False)
-                base_coll = collective_bytes(
+                base_coll = _collective_bytes(
                     base_jit.lower(*base_args).compile().as_text())
         mem = compiled.memory_analysis()
         cost = cost_dict(compiled)
         hlo = compiled.as_text()
-        coll = collective_bytes(hlo)
+        coll = _collective_bytes(hlo)
         if compress:
             rec["collective_bytes_uncompressed"] = base_coll
             rec["collective_delta_bytes"] = base_coll["total"] - coll["total"]
@@ -402,7 +368,7 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                                             overlap=overlap)
             compiled = jitted.lower(*args).compile()
             hlo = compiled.as_text()
-            coll = collective_bytes(hlo)
+            coll = _collective_bytes(hlo)
             total = coll["total"] * k
             # collectives sit once in the fori_loop body, so the HLO
             # count (and the self-lane correction) is per iteration
@@ -421,7 +387,7 @@ def run_graph_cell(out_dir: Path, scale: int = 10, k: int = 8,
                 "collective_bytes_per_device": coll,
                 "collective_bytes_total": total,
                 "collective_bytes_wire": wire,
-                "collective_permute_count": collective_permute_count(hlo),
+                "collective_permute_count": _collective_permute_count(hlo),
             })
             ov = " × overlap" if overlap else ""
             print(f"[graph × {rec['program']} × {exchange}{ov}] OK  "
@@ -654,7 +620,7 @@ def _lower_probe(cfg, shape_name, mesh, rules, *, mp, block_kv, loss_chunk):
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
     cost = cost_dict(compiled)
-    coll = collective_bytes(compiled.as_text())
+    coll = _collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
             "coll": float(coll["total"])}

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models import decode_step, init_cache, init_params
+from repro.models import init_cache, init_params
 from repro.train import make_decode_fn
 
 

@@ -13,13 +13,11 @@ seq_len); encoder-decoder decodes against a stubbed encoder memory.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import ModelConfig, init_cache
-from repro.models.config import ModelConfig as MC
 
 SHAPES = {
     "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),

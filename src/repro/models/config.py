@@ -5,7 +5,7 @@ numbers; ``reduced()`` derives the CPU smoke-test variant.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 from .layers import round_up

@@ -13,8 +13,6 @@ Entry points (all pure):
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any
 
 import jax

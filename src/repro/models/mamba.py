@@ -11,7 +11,6 @@ Used by ``mamba2-130m`` and the Mamba blocks of ``jamba-1.5-large``.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

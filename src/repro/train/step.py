@@ -7,8 +7,6 @@ repro.dist.compress), optimizer fused in.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.models import (decode_step, forward_train, init_cache,
-                          init_params, prefill)
+                          init_params)
 
 
 def make_batch(cfg, B=2, S=32, key=0):

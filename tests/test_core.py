@@ -2,14 +2,14 @@
 import numpy as np
 import pytest
 
-from repro.core import (CLUGPConfig, ClusterGraph, best_response_rounds,
+from repro.core import (CLUGPConfig, best_response_rounds,
                         contract, partition,
                         default_vmax, global_cost, lambda_max, metrics,
                         potential, streaming_clustering_jax,
                         streaming_clustering_np, theory, transform_jax,
                         transform_np, web_graph)
 from repro.core.clustering import clustering_result_from_jax
-from repro.core.graphgen import community_web, random_stream, social_graph
+from repro.core.graphgen import random_stream
 from repro.core import baselines
 
 

@@ -183,10 +183,7 @@ def test_shard_map_overlap_and_warm_identity(multidevice):
         sess = GraphSession(SessionConfig(clugp=CLUGPConfig(k=8)))
         sess.partition(g.src, g.dst, g.num_vertices).layout()
         mesh = make_graph_mesh(8)
-        # AFTER jax locked its 8 virtual devices: importing dryrun
-        # rewrites XLA_FLAGS for its own 512-device default, which only
-        # matters before first init
-        from repro.launch.dryrun import collective_permute_count
+        from repro.analysis.ir import collective_permute_count
 
         base = sess.run("pagerank", iters=6, exchange="ragged", mesh=mesh)
         over = sess.run("pagerank", iters=6, exchange="ragged", mesh=mesh,

@@ -10,7 +10,7 @@ from repro.core import (CLUGPConfig, partition, contract,
                         best_response_rounds, default_vmax, global_cost,
                         lambda_max, metrics, potential,
                         streaming_clustering_np, transform_np)
-from repro.core.graphgen import Graph, _compact
+from repro.core.graphgen import _compact
 
 
 @st.composite

@@ -267,7 +267,7 @@ np.testing.assert_array_equal(sh, sim)
 
 # dry-run cells from round-tripped sessions compile to identical
 # collective bytes (the reproducibility contract on the wire)
-from repro.launch.dryrun import collective_bytes
+from repro.analysis.ir import collective_bytes
 bytes_ = []
 for s in (s1, s2):
     jitted, args = s.dryrun_step("pagerank", mesh=mesh)
